@@ -1,0 +1,58 @@
+"""Paper Figs. 8-11: partitioning time + execution time for all seven
+strategies across dataset regimes x four applications.
+
+The paper's headline result — no single partitioner dominates; the winner
+tracks the vertex:hyperedge ratio and skew — is asserted by
+tests/test_paper_claims.py over the stats this harness emits.
+"""
+from __future__ import annotations
+
+from repro.algorithms import (
+    label_propagation_spec,
+    pagerank_entropy_spec,
+    pagerank_spec,
+    run_local,
+    shortest_paths_spec,
+)
+from repro.data import make_dataset
+from repro.partition import STRATEGIES, partition
+
+from benchmarks.common import SCALE, row, timed
+
+APPS = {
+    "labelprop": lambda hg: label_propagation_spec(hg, iters=8),
+    "pagerank": lambda hg: pagerank_spec(hg, iters=8),
+    "pagerank_entropy": lambda hg: pagerank_entropy_spec(hg, iters=8),
+    "sssp": lambda hg: shortest_paths_spec(hg, 0, max_iters=16),
+}
+
+REGIMES = {
+    "dblp": 0.003,
+    "friendster": 0.001,
+    "orkut": 0.0004,
+}
+
+
+def run(n_parts: int = 8) -> None:
+    for regime, base_scale in REGIMES.items():
+        hg = make_dataset(regime, scale=base_scale * SCALE, seed=0)
+        for strat in STRATEGIES:
+            kw = {"chunk": 256} if "greedy" in strat else {}
+            plan = partition(strat, hg, n_parts, **kw)
+            s = plan.stats
+            row(
+                f"partition/{regime}/{strat}/partition_time",
+                plan.partition_time_s * 1e6,
+                f"vrep={s.vertex_replication:.2f};"
+                f"herep={s.hyperedge_replication:.2f};"
+                f"bal={s.edge_balance:.2f};"
+                f"sync_bytes={s.sync_bytes_per_dim:.0f}",
+            )
+        for app, make_spec in APPS.items():
+            t, _ = timed(lambda: run_local(make_spec(hg)), repeats=2)
+            row(f"partition/{regime}/{app}/exec_time", t * 1e6,
+                f"nv={hg.n_vertices};ne={hg.n_hyperedges};nnz={hg.nnz}")
+
+
+if __name__ == "__main__":
+    run()

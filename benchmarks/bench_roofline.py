@@ -1,0 +1,34 @@
+"""§Roofline table: render the dry-run JSON into the per-cell report."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+
+def run(path: str = "reports/dryrun_full.json") -> None:
+    if not os.path.exists(path):
+        row("roofline/missing", 0.0,
+            f"run `python -m repro.launch.dryrun --all --mesh both "
+            f"--out {path}` first")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for r in results:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        row(
+            f"roofline/{r['cell']}",
+            rf["compute_s"] * 1e6,
+            f"mem_us={rf['memory_s'] * 1e6:.1f};"
+            f"coll_us={rf['collective_s'] * 1e6:.1f};"
+            f"dom={rf['dominant']};"
+            f"useful={rf['useful_ratio']:.3f};"
+            f"frac={rf['roofline_fraction']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Figs. 12-14: strong scaling with worker count.
+
+On this CPU host all "devices" share one core, so wall time cannot show
+real speedup; what scales — and what we measure — is the *per-partition
+work* (edges/shard) and the projected sync volume, the quantities that
+govern Fig. 12-14 on real hardware.  Wall time is reported for reference.
+
+The distributed executor itself runs under forced host devices in the
+separate dry-run/regression entry (tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from repro.data import make_dataset
+from repro.partition import partition
+
+from benchmarks.common import SCALE, row
+
+
+def run() -> None:
+    for regime, base_scale in [("orkut", 0.0004), ("friendster", 0.001),
+                               ("dblp", 0.003), ("apache", 0.05)]:
+        hg = make_dataset(regime, scale=base_scale * SCALE, seed=0)
+        for n_parts in (2, 4, 8, 16, 32, 64):
+            plan = partition("random_both_cut", hg, n_parts)
+            s = plan.stats
+            per_shard = plan.shard_len
+            row(
+                f"scaling/{regime}/p{n_parts}/edges_per_shard",
+                float(per_shard),
+                f"vrep={s.vertex_replication:.2f};"
+                f"herep={s.hyperedge_replication:.2f};"
+                f"sync_bytes={s.sync_bytes_per_dim:.0f};"
+                f"pad={s.pad_fraction:.3f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

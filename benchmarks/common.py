@@ -1,0 +1,30 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+# Global scale knob: 1.0 reproduces paper-sized ratios at CI-feasible size;
+# raise on beefier hosts (paper-scale needs a real cluster).
+SCALE = float(os.environ.get("BENCH_SCALE", "1.0"))
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall time; blocks on jax outputs."""
+    times = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,15 @@
+"""Serve a small LM with batched requests: prefill + decode loop.
+
+Run: PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+# The serving driver lives in the launch layer; this example invokes it the
+# way an operator would.
+if __name__ == "__main__":
+    sys.exit(subprocess.call([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", "gemma3-12b", "--smoke",
+        "--batch", "4", "--prompt-len", "24", "--gen", "12",
+    ]))

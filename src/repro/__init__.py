@@ -1,0 +1,4 @@
+"""repro: MESH (distributed hypergraph processing) rebuilt as a JAX/TPU
+multi-pod framework. See DESIGN.md for the system inventory."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,44 @@
+"""Hypergraph applications written against the public MESH API.
+
+Each is a faithful port of a paper listing (LOC parity is itself one of the
+paper's claims — see ``benchmarks/bench_loc.py``).
+"""
+from repro.algorithms.pagerank import (
+    pagerank,
+    pagerank_entropy,
+    pagerank_entropy_seq,
+    pagerank_spec,
+    pagerank_entropy_spec,
+)
+from repro.algorithms.label_propagation import (
+    label_propagation,
+    label_propagation_spec,
+)
+from repro.algorithms.sssp import shortest_paths, shortest_paths_spec
+from repro.algorithms.random_walk import random_walk, random_walk_spec
+from repro.algorithms.components import (
+    connected_components,
+    connected_components_spec,
+)
+from repro.algorithms.graph_pagerank import graph_pagerank
+from repro.algorithms.spec import AlgorithmSpec, run_local, run_distributed
+
+__all__ = [
+    "pagerank",
+    "pagerank_entropy",
+    "pagerank_entropy_seq",
+    "pagerank_spec",
+    "pagerank_entropy_spec",
+    "label_propagation",
+    "label_propagation_spec",
+    "shortest_paths",
+    "shortest_paths_spec",
+    "random_walk",
+    "random_walk_spec",
+    "connected_components",
+    "connected_components_spec",
+    "graph_pagerank",
+    "AlgorithmSpec",
+    "run_local",
+    "run_distributed",
+]

@@ -1,0 +1,58 @@
+"""AlgorithmSpec: one definition, every engine.
+
+Each algorithm module builds a spec (initial state + programs); thin
+wrappers run it on the local engine, and ``run_distributed`` runs the same
+spec under shard_map per a PartitionPlan — the property tests assert the
+two agree, which is the system's core correctness invariant.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.core.api import Program
+from repro.core.engine import compute
+from repro.core.hypergraph import HyperGraph
+
+
+class AlgorithmSpec(NamedTuple):
+    hg0: HyperGraph
+    initial_msg: Any
+    v_program: Program
+    he_program: Program
+    max_iters: int
+    extract: Callable[[HyperGraph], Any]
+
+
+def run_local(spec: AlgorithmSpec):
+    out = compute(
+        spec.hg0,
+        max_iters=spec.max_iters,
+        initial_msg=spec.initial_msg,
+        v_program=spec.v_program,
+        he_program=spec.he_program,
+    )
+    return spec.extract(out)
+
+
+def run_distributed(
+    spec: AlgorithmSpec,
+    plan,
+    mesh,
+    *,
+    backend: str = "replicated",
+    axis: str = "data",
+):
+    from repro.core.distributed import distributed_compute
+
+    out = distributed_compute(
+        spec.hg0,
+        plan,
+        mesh,
+        max_iters=spec.max_iters,
+        initial_msg=spec.initial_msg,
+        v_program=spec.v_program,
+        he_program=spec.he_program,
+        axis=axis,
+        backend=backend,
+    )
+    return spec.extract(out)

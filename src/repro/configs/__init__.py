@@ -1,0 +1,36 @@
+"""Architecture registry: ``--arch <id>`` resolution for the launcher.
+
+10 assigned architectures + the paper's own hypergraph workload configs.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchSpec, ShapeSpec
+
+_MODULES = {
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b",
+    "mace": "repro.configs.mace",
+    "nequip": "repro.configs.nequip",
+    "gat-cora": "repro.configs.gat_cora",
+    "pna": "repro.configs.pna",
+    "bert4rec": "repro.configs.bert4rec",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ArchSpec:
+    mod = importlib.import_module(_MODULES[arch_id])
+    return mod.smoke() if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> dict[str, ArchSpec]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}
+
+
+__all__ = ["ArchSpec", "ShapeSpec", "ARCH_IDS", "get_config", "all_configs"]

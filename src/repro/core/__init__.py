@@ -1,0 +1,18 @@
+"""MESH core: the paper's contribution as a composable JAX module."""
+from repro.core.hypergraph import HyperGraph
+from repro.core.api import Program, ProcedureOut, constant_initial_msg
+from repro.core.engine import compute, deliver, superstep_pair
+from repro.core.clique import Graph, to_graph, clique_expansion_size
+
+__all__ = [
+    "HyperGraph",
+    "Program",
+    "ProcedureOut",
+    "constant_initial_msg",
+    "compute",
+    "deliver",
+    "superstep_pair",
+    "Graph",
+    "to_graph",
+    "clique_expansion_size",
+]

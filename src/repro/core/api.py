@@ -1,0 +1,94 @@
+"""The MESH programming model: "think like a vertex *or hyperedge*".
+
+Faithful JAX port of the paper's Listing-1 API.  Differences forced by SPMD
+(and recorded in DESIGN.md §4): procedures are *vectorized* over the whole
+entity set instead of per-entity closures; ``ctx.become`` is the returned
+attribute; ``ctx.broadcast`` is the returned message; ``ctx.send(f, to)``
+per-destination messages are the optional per-incidence ``edge_transform``.
+
+A ``Program`` owns the ``MessageCombiner`` for the messages it *sends*
+(same ownership as the paper).  ``combiner=None`` auto-derives it from the
+message type — the Algebird feature, via ``sparse.segment.derive_monoid_for``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import Monoid, derive_monoid_for, resolve_monoid
+
+Pytree = Any
+
+
+class ProcedureOut(NamedTuple):
+    """What one superstep of a vertex/hyperedge program produces.
+
+    attr: updated attribute pytree, leading dim = entity count
+      (``ctx.become``).
+    msg: outgoing message pytree, leading dim = entity count
+      (``ctx.broadcast`` — delivered to every incident entity, combined at
+      the destination with the sender program's combiner).
+    active: optional ``[n] bool``; inactive entities send nothing this
+      superstep (their message rows are replaced by the combiner identity).
+      ``None`` = all active (PageRank/LabelProp semantics).
+    """
+
+    attr: Pytree
+    msg: Pytree
+    active: jnp.ndarray | None = None
+
+
+# (step, ids[n], attr, in_msg, degree[n]) -> ProcedureOut
+Procedure = Callable[
+    [jnp.ndarray, jnp.ndarray, Pytree, Pytree, jnp.ndarray], ProcedureOut
+]
+
+# optional per-incidence message transform:
+# (msg_row_pytree, e_attr_row_pytree) -> msg_row_pytree
+EdgeTransform = Callable[[Pytree, Pytree], Pytree]
+
+
+@dataclasses.dataclass(frozen=True)
+class Program:
+    """One side's behavior (vertex Program or hyperedge Program).
+
+    ``reducer`` generalizes the MessageCombiner beyond monoids: it receives
+    the *per-incidence* message rows plus destination ids and produces the
+    combined per-destination message — the vectorized equivalent of the
+    paper's ``Seq``-typed messages (PageRank-Entropy needs the full member
+    multiset, not a fold).  When ``reducer`` is None the monoid fast path
+    (``combiner``) is used; monoids are what allow pre-aggregation before
+    the network hop, so programs should prefer them.
+    """
+
+    procedure: Procedure
+    combiner: str | Monoid | None = None  # None => auto-derive per leaf
+    edge_transform: EdgeTransform | None = None
+    # (rows pytree [nnz,...], dst_ids [nnz], num_dst, live [nnz] bool|None)
+    #   -> combined msg pytree [num_dst, ...]
+    reducer: Callable | None = None
+
+    def monoid_for(self, msg_leaf: jnp.ndarray) -> Monoid:
+        if self.combiner is None:
+            return derive_monoid_for(msg_leaf)
+        return resolve_monoid(self.combiner)
+
+
+def constant_initial_msg(template: Pytree, n: int) -> Pytree:
+    """Broadcast the user's ``initialMsg`` to every entity (superstep 0)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            jnp.asarray(x), (n,) + jnp.shape(jnp.asarray(x))
+        ),
+        template,
+    )
+
+
+def identity_rows(monoid: Monoid, template_leaf: jnp.ndarray, n: int):
+    ident = monoid.identity(template_leaf.dtype)
+    return jnp.broadcast_to(ident, (n,) + template_leaf.shape[1:]).astype(
+        template_leaf.dtype
+    )

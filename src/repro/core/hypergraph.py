@@ -1,0 +1,204 @@
+"""The HyperGraph structure: bipartite incidence representation.
+
+A hypergraph H=(V,E) is stored exactly as MESH stores it inside GraphX: a
+bipartite incidence list with low-level edges directed vertex -> hyperedge.
+``src[i]`` is a vertex id, ``dst[i]`` a hyperedge id; attribute pytrees hang
+off each side with leading dims ``n_vertices`` / ``n_hyperedges``.
+
+Registered as a pytree so whole hypergraphs flow through jit / shard_map /
+scan unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.segment import segment_count
+
+Pytree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HyperGraph:
+    """Bipartite incidence representation of a hypergraph.
+
+    Attributes:
+      src: ``[nnz]`` int32 vertex id per incidence.
+      dst: ``[nnz]`` int32 hyperedge id per incidence.
+      n_vertices / n_hyperedges: static sizes.
+      v_attr / he_attr: attribute pytrees (leading dim = entity count).
+      e_attr: optional per-incidence attribute pytree (leading dim nnz),
+        e.g. membership weights.
+      e_mask: optional ``[nnz]`` float mask (1=live). Padding incidences
+        (from partitioning or subHyperGraph) carry 0 and contribute the
+        combiner identity.
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    n_vertices: int
+    n_hyperedges: int
+    v_attr: Pytree = None
+    he_attr: Pytree = None
+    e_attr: Pytree = None
+    e_mask: jnp.ndarray | None = None
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        children = (
+            self.src, self.dst, self.v_attr, self.he_attr, self.e_attr,
+            self.e_mask,
+        )
+        aux = (self.n_vertices, self.n_hyperedges)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        src, dst, v_attr, he_attr, e_attr, e_mask = children
+        return cls(
+            src=src, dst=dst, n_vertices=aux[0], n_hyperedges=aux[1],
+            v_attr=v_attr, he_attr=he_attr, e_attr=e_attr, e_mask=e_mask,
+        )
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_hyperedge_lists(
+        cls,
+        hyperedges: list[list[int]],
+        n_vertices: int | None = None,
+        v_attr: Pytree = None,
+        he_attr: Pytree = None,
+    ) -> "HyperGraph":
+        """Build from a python list of member lists (tests / tiny inputs)."""
+        src = np.concatenate(
+            [np.asarray(m, dtype=np.int32) for m in hyperedges]
+        ) if hyperedges else np.zeros(0, np.int32)
+        dst = np.concatenate(
+            [np.full(len(m), i, dtype=np.int32) for i, m in enumerate(hyperedges)]
+        ) if hyperedges else np.zeros(0, np.int32)
+        nv = n_vertices if n_vertices is not None else (
+            int(src.max()) + 1 if len(src) else 0
+        )
+        return cls(
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            n_vertices=nv,
+            n_hyperedges=len(hyperedges),
+            v_attr=v_attr,
+            he_attr=he_attr,
+        )
+
+    @classmethod
+    def from_coo(
+        cls,
+        src: np.ndarray,
+        dst: np.ndarray,
+        n_vertices: int,
+        n_hyperedges: int,
+        **kw,
+    ) -> "HyperGraph":
+        return cls(
+            src=jnp.asarray(src, jnp.int32),
+            dst=jnp.asarray(dst, jnp.int32),
+            n_vertices=int(n_vertices),
+            n_hyperedges=int(n_hyperedges),
+            **kw,
+        )
+
+    # -- basic queries --------------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return int(self.src.shape[0])
+
+    def degrees(self) -> jnp.ndarray:
+        """Vertex degree: number of hyperedges each vertex belongs to."""
+        w = (
+            self.e_mask.astype(jnp.int32)
+            if self.e_mask is not None
+            else jnp.ones_like(self.src)
+        )
+        return jax.ops.segment_sum(w, self.src, self.n_vertices)
+
+    def cardinalities(self) -> jnp.ndarray:
+        """Hyperedge cardinality: number of member vertices."""
+        w = (
+            self.e_mask.astype(jnp.int32)
+            if self.e_mask is not None
+            else jnp.ones_like(self.dst)
+        )
+        return jax.ops.segment_sum(w, self.dst, self.n_hyperedges)
+
+    # -- transformations (GraphX-style structural ops) ------------------------
+    def map_vertices(self, fn: Callable[[jnp.ndarray, Pytree], Pytree]):
+        ids = jnp.arange(self.n_vertices, dtype=jnp.int32)
+        return dataclasses.replace(self, v_attr=fn(ids, self.v_attr))
+
+    def map_hyperedges(self, fn: Callable[[jnp.ndarray, Pytree], Pytree]):
+        ids = jnp.arange(self.n_hyperedges, dtype=jnp.int32)
+        return dataclasses.replace(self, he_attr=fn(ids, self.he_attr))
+
+    def with_attrs(self, v_attr: Pytree = None, he_attr: Pytree = None):
+        return dataclasses.replace(
+            self,
+            v_attr=v_attr if v_attr is not None else self.v_attr,
+            he_attr=he_attr if he_attr is not None else self.he_attr,
+        )
+
+    def sub_hypergraph(
+        self,
+        v_pred: np.ndarray | None = None,
+        he_pred: np.ndarray | None = None,
+    ) -> "HyperGraph":
+        """Host-side structural subsetting (preprocessing, not jitted).
+
+        Keeps ids stable; drops incidences touching excluded entities.
+        Mirrors GraphX ``subgraph`` semantics where excluded entities keep
+        their slot but lose connectivity.
+        """
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        keep = np.ones(len(src), dtype=bool)
+        if v_pred is not None:
+            keep &= np.asarray(v_pred)[src]
+        if he_pred is not None:
+            keep &= np.asarray(he_pred)[dst]
+        sub = dataclasses.replace(
+            self,
+            src=jnp.asarray(src[keep]),
+            dst=jnp.asarray(dst[keep]),
+            e_attr=jax.tree.map(lambda a: a[jnp.asarray(keep)], self.e_attr)
+            if self.e_attr is not None
+            else None,
+            e_mask=None,
+        )
+        return sub
+
+    def sorted_by_dst(self) -> "HyperGraph":
+        """Return an equivalent hypergraph with incidences sorted by
+        hyperedge id (CSR-friendly; required by the segsum kernel path)."""
+        order = jnp.argsort(self.dst, stable=True)
+        take = lambda a: jnp.take(a, order, axis=0)
+        return dataclasses.replace(
+            self,
+            src=take(self.src),
+            dst=take(self.dst),
+            e_attr=jax.tree.map(take, self.e_attr)
+            if self.e_attr is not None
+            else None,
+            e_mask=take(self.e_mask) if self.e_mask is not None else None,
+        )
+
+    def validate(self) -> None:
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        if len(src) != len(dst):
+            raise ValueError("src/dst length mismatch")
+        if len(src) and (src.min() < 0 or src.max() >= self.n_vertices):
+            raise ValueError("vertex id out of range")
+        if len(dst) and (dst.min() < 0 or dst.max() >= self.n_hyperedges):
+            raise ValueError("hyperedge id out of range")

@@ -1,0 +1,10 @@
+"""Datasets: synthetic hypergraph generators calibrated to the paper's
+Table I regimes (no network access in this environment; SNAP data is
+emulated by matching V:E ratio, degree/cardinality skew, and scale)."""
+from repro.data.generators import (
+    DATASET_REGIMES,
+    powerlaw_hypergraph,
+    make_dataset,
+)
+
+__all__ = ["DATASET_REGIMES", "powerlaw_hypergraph", "make_dataset"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+segsum/  - segment-sum as blocked one-hot matmul on the MXU (the MESH
+           combine step: scatter-reduce -> dense systolic work).
+flash/   - FlashAttention forward (prefill hot spot).
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with the interpret switch), ref.py (pure-jnp oracle).  Kernels are
+an opt-in fast path; the jnp reference is the default execution path and
+the oracle every sweep asserts against.
+"""

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel (MHA, optional causal)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, causal: bool = True
+) -> jnp.ndarray:
+    """q,k,v: [B, H, S, D] -> [B, H, S, D] (fp32 softmax)."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    ).astype(q.dtype)

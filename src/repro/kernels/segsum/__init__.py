@@ -1,0 +1,3 @@
+from repro.kernels.segsum.ops import segment_sum_mxu
+
+__all__ = ["segment_sum_mxu"]

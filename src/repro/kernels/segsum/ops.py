@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the segsum MXU kernel (handles padding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segsum.segsum import segsum_pallas
+
+
+def segment_sum_mxu(
+    msgs: jnp.ndarray,
+    dst: jnp.ndarray,
+    num_segments: int,
+    *,
+    block_n: int = 128,
+    block_e: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Drop-in for ``jax.ops.segment_sum(msgs, dst, num_segments)`` running
+    the blocked one-hot MXU kernel.  Pads E to a block multiple (padding
+    edges point past every output tile)."""
+    e, d = msgs.shape
+    e_pad = -(-e // block_e) * block_e
+    n_pad = -(-num_segments // block_n) * block_n
+    if e_pad != e:
+        msgs = jnp.concatenate(
+            [msgs, jnp.zeros((e_pad - e, d), msgs.dtype)], axis=0
+        )
+        dst = jnp.concatenate(
+            [dst, jnp.full((e_pad - e,), n_pad, dst.dtype)], axis=0
+        )
+    out = segsum_pallas(
+        msgs, dst, num_segments,
+        block_n=block_n, block_e=block_e, interpret=interpret,
+    )
+    return out.astype(msgs.dtype)

@@ -1,0 +1,16 @@
+"""Launch layer: meshes, task builders, dry-run, trainers, serving."""
+from repro.launch.mesh import (
+    dp_axes,
+    flat_axes,
+    make_host_mesh,
+    make_production_mesh,
+    total_devices,
+)
+
+__all__ = [
+    "dp_axes",
+    "flat_axes",
+    "make_host_mesh",
+    "make_production_mesh",
+    "total_devices",
+]

@@ -1,0 +1,225 @@
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions, and compiles for the production meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out reports/dryrun.json
+
+The FIRST TWO LINES below must run before any other import (jax locks the
+device count at first init): 512 placeholder host devices back both the
+16x16 single-pod mesh and the 2x16x16 multi-pod mesh.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+
+def _mesh_for(kind: str):
+    from repro.launch.mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=(kind == "multi"))
+
+
+def _lm_variant_reports(spec, shape, mesh):
+    """Compile unrolled 1- and 2-period variants for the cost-analysis
+    differencing (see roofline.analysis docstring).
+
+    Gradient-accumulated train steps also hide an inner scan; variants run
+    accum=1 on one microbatch and every additive term is scaled back by
+    accum_steps."""
+    from repro.launch.tasks import build_task
+    from repro.roofline.analysis import analyze_task
+
+    cfg = spec.model
+    accum = shape.dims.get("accum_steps", 1)
+    var_shape = shape
+    if accum > 1:
+        dims = dict(shape.dims)
+        dims["global_batch"] //= accum
+        dims["accum_steps"] = 1
+        var_shape = dataclasses.replace(shape, dims=dims)
+    reports = []
+    for n_periods in (1, 2):
+        var_cfg = dataclasses.replace(
+            cfg, n_layers=cfg.period * n_periods, scan_layers=False
+        )
+        var_spec = dataclasses.replace(spec, model=var_cfg)
+        var_task = build_task(var_spec, var_shape, mesh)
+        var_task.name += f"[unroll{n_periods}p]"
+        rep = analyze_task(var_task)
+        if accum > 1:
+            rep.hlo_flops *= accum
+            rep.hlo_bytes *= accum
+            rep.collective_bytes_per_dev *= accum
+            rep.collective_bytes_by_kind = {
+                k: v * accum for k, v in rep.collective_bytes_by_kind.items()
+            }
+        reports.append(rep)
+    return reports[0], reports[1], cfg.n_periods
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             smoke: bool = False, with_roofline: bool = True) -> dict:
+    from repro.configs import get_config
+    from repro.launch.tasks import build_task
+    from repro.roofline.analysis import (
+        analyze_compiled, parse_collectives, task_n_devices,
+    )
+
+    spec = get_config(arch_id, smoke=smoke)
+    shape = spec.shape(shape_name)
+    if shape.skip:
+        return {
+            "cell": f"{arch_id}:{shape_name}", "mesh": mesh_kind,
+            "status": "skipped", "reason": shape.skip,
+        }
+    mesh = _mesh_for(mesh_kind)
+    t0 = time.perf_counter()
+    task = build_task(spec, shape, mesh)
+    lowered = task.lower()
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_row = {
+        "argument_gb": mem.argument_size_in_bytes / 1e9,
+        "output_gb": mem.output_size_in_bytes / 1e9,
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "alias_gb": mem.alias_size_in_bytes / 1e9,
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = parse_collectives(compiled.as_text())
+
+    row = {
+        "cell": f"{arch_id}:{shape_name}",
+        "mesh": mesh_kind,
+        "status": "ok",
+        "devices": task_n_devices(task),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_row,
+        "cost_flops_per_dev": float(cost.get("flops", 0.0)),
+        "cost_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+        "collective_counts": coll.counts,
+        "collective_bytes_per_dev_static": coll.total_bytes,
+        "notes": task.notes,
+    }
+
+    if with_roofline and mesh_kind == "single":
+        rep = analyze_compiled(
+            task.name, compiled, task_n_devices(task),
+            task.model_flops_per_step,
+        )
+        if spec.family == "lm" and spec.model.scan_layers:
+            r1, r2, n_periods = _lm_variant_reports(spec, shape, mesh)
+            k = n_periods - 1
+            rep.hlo_flops = r1.hlo_flops + k * (r2.hlo_flops - r1.hlo_flops)
+            rep.hlo_bytes = r1.hlo_bytes + k * (r2.hlo_bytes - r1.hlo_bytes)
+            rep.collective_bytes_per_dev = (
+                r1.collective_bytes_per_dev
+                + k * (r2.collective_bytes_per_dev
+                       - r1.collective_bytes_per_dev)
+            )
+            rep.collective_bytes_by_kind = {
+                kk: r1.collective_bytes_by_kind.get(kk, 0.0)
+                + k * (r2.collective_bytes_by_kind.get(kk, 0.0)
+                       - r1.collective_bytes_by_kind.get(kk, 0.0))
+                for kk in set(r1.collective_bytes_by_kind)
+                | set(r2.collective_bytes_by_kind)
+            }
+            rep.finish()
+        row["roofline"] = rep.row()
+    return row
+
+
+def iter_cells(archs=None, shapes=None, smoke=False):
+    from repro.configs import ARCH_IDS, get_config
+
+    for arch_id in archs or ARCH_IDS:
+        spec = get_config(arch_id, smoke=smoke)
+        for shape_name in spec.shapes:
+            if shapes and shape_name not in shapes:
+                continue
+            yield arch_id, shape_name
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use reduced configs (CI)")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if not args.all and not args.arch:
+        ap.error("pass --arch <id> (repeatable) or --all")
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    results = []
+    failures = 0
+    for arch_id, shape_name in iter_cells(args.arch, args.shape,
+                                          args.smoke):
+        for mesh_kind in meshes:
+            label = f"{arch_id}:{shape_name}@{mesh_kind}"
+            try:
+                row = run_cell(
+                    arch_id, shape_name, mesh_kind, smoke=args.smoke,
+                    with_roofline=not args.no_roofline,
+                )
+            except Exception as e:  # noqa: BLE001 - report and continue
+                traceback.print_exc()
+                row = {
+                    "cell": f"{arch_id}:{shape_name}", "mesh": mesh_kind,
+                    "status": "FAILED", "error": f"{type(e).__name__}: {e}",
+                }
+                failures += 1
+            results.append(row)
+            status = row["status"]
+            extra = ""
+            if status == "ok":
+                m = row["memory"]
+                extra = (
+                    f"compile={row['compile_s']:.1f}s "
+                    f"args={m['argument_gb']:.2f}GB "
+                    f"temp={m['temp_gb']:.2f}GB"
+                )
+                if "roofline" in row:
+                    r = row["roofline"]
+                    extra += (
+                        f" dom={r['dominant']}"
+                        f" frac={r['roofline_fraction']:.3f}"
+                    )
+            elif status == "skipped":
+                extra = row["reason"][:60]
+            print(f"[{status:7s}] {label:55s} {extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Model zoo: the 10 assigned architectures' implementations."""
+from repro.models.transformer import LMConfig
+from repro.models.moe import MoEConfig
+from repro.models.gnn import (
+    EquivariantConfig,
+    GATConfig,
+    GraphBatch,
+    PNAConfig,
+    random_graph,
+)
+from repro.models.recsys import BERT4RecConfig
+
+__all__ = [
+    "LMConfig",
+    "MoEConfig",
+    "EquivariantConfig",
+    "GATConfig",
+    "GraphBatch",
+    "PNAConfig",
+    "random_graph",
+    "BERT4RecConfig",
+]

@@ -1,0 +1,13 @@
+"""GNN model zoo: GAT, PNA, NequIP, MACE over the GraphBatch container."""
+from repro.models.gnn.graph import GraphBatch, random_graph
+from repro.models.gnn.gat import GATConfig
+from repro.models.gnn.pna import PNAConfig
+from repro.models.gnn.equivariant import EquivariantConfig
+
+__all__ = [
+    "GraphBatch",
+    "random_graph",
+    "GATConfig",
+    "PNAConfig",
+    "EquivariantConfig",
+]

@@ -1,0 +1,74 @@
+"""GAT (Veličković et al., arXiv:1710.10903): SDDMM edge scores ->
+segment-softmax -> SpMM, the attention instance of the gather/segment
+substrate."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.graph import GraphBatch
+from repro.sparse.segment import mp_segment_sum, segment_softmax
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    d_in: int = 1433
+    negative_slope: float = 0.2
+
+
+def init_params(key, cfg: GATConfig):
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        d_out = (
+            cfg.n_classes if i == cfg.n_layers - 1 else cfg.d_hidden
+        )
+        heads = 1 if i == cfg.n_layers - 1 else cfg.n_heads
+        layers.append(
+            {
+                "w": jax.random.normal(k1, (d_in, heads, d_out))
+                * (d_in**-0.5),
+                "a_src": jax.random.normal(k2, (heads, d_out)) * 0.1,
+                "a_dst": jax.random.normal(k3, (heads, d_out)) * 0.1,
+            }
+        )
+        d_in = d_out * heads
+    return {"layers": layers}
+
+
+def forward(params, cfg: GATConfig, g: GraphBatch) -> jnp.ndarray:
+    x = g.node_feat
+    n = g.n_nodes
+    for i, lp in enumerate(params["layers"]):
+        h = jnp.einsum("nf,fhd->nhd", x, lp["w"])      # [N, H, D]
+        e_src = (h * lp["a_src"]).sum(-1)               # [N, H]
+        e_dst = (h * lp["a_dst"]).sum(-1)
+        logits = jax.nn.leaky_relu(
+            e_src[g.edge_src] + e_dst[g.edge_dst], cfg.negative_slope
+        )                                               # [E, H]
+        logits = jnp.where(g.edge_mask[:, None] > 0, logits, -1e30)
+        alpha = segment_softmax(logits, g.edge_dst, n)  # [E, H]
+        alpha = alpha * g.edge_mask[:, None]
+        msg = h[g.edge_src] * alpha[..., None]          # [E, H, D]
+        agg = mp_segment_sum(msg, g.edge_dst, n)        # [N, H, D]
+        if i == cfg.n_layers - 1:
+            x = agg.mean(axis=1)                        # average heads
+        else:
+            x = jax.nn.elu(agg.reshape(n, -1))          # concat heads
+    return x
+
+
+def loss_fn(params, cfg: GATConfig, g: GraphBatch) -> jnp.ndarray:
+    logits = forward(params, cfg, g)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, g.labels[:, None], axis=-1)[:, 0]
+    m = g.node_mask if g.node_mask is not None else jnp.ones_like(nll)
+    return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)

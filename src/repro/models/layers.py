@@ -1,0 +1,184 @@
+"""Shared neural layers (pure-jnp, pjit-friendly, no framework deps).
+
+Parameters are plain pytrees (nested dicts of arrays); every init function
+takes an explicit PRNG key; compute dtype is bf16 by default with fp32
+params — the production training setup.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+DEFAULT_COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    scale = d_in**-0.5
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def dense(params, x, compute_dtype=DEFAULT_COMPUTE_DTYPE):
+    w = params["w"].astype(compute_dtype)
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype), w)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32
+    )
+    return y.astype(dt)
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model**-0.5
+    s_out = d_ff**-0.5
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def swiglu(params, x, compute_dtype=DEFAULT_COMPUTE_DTYPE):
+    from repro.models.sharding import constrain
+
+    x = x.astype(compute_dtype)
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(compute_dtype))
+    tp_spec = ("dp",) + (None,) * (x.ndim - 2) + ("tp",)
+    h = constrain(jax.nn.silu(g) * u, *tp_spec)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(compute_dtype))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0):
+    """Rotary position embedding.
+
+    x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq].
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rot = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return rot.astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {
+        "table": (
+            jax.random.normal(key, (vocab, d_model)) * (d_model**-0.5)
+        ).astype(dtype)
+    }
+
+
+def embed(params, ids, compute_dtype=DEFAULT_COMPUTE_DTYPE):
+    return jnp.take(params["table"], ids, axis=0).astype(compute_dtype)
+
+
+def unembed(params, x, compute_dtype=DEFAULT_COMPUTE_DTYPE):
+    """Tied output projection: logits over the vocab."""
+    return jnp.einsum(
+        "...d,vd->...v",
+        x.astype(compute_dtype),
+        params["table"].astype(compute_dtype),
+    )
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token-level cross entropy in fp32 (stable logsumexp)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+def fused_unembed_cross_entropy(
+    table: jnp.ndarray,
+    x: jnp.ndarray,
+    labels: jnp.ndarray,
+    mask: jnp.ndarray | None = None,
+    chunk: int = 512,
+    compute_dtype=DEFAULT_COMPUTE_DTYPE,
+) -> jnp.ndarray:
+    """Fused unembed + softmax-xent, chunked over sequence.
+
+    Never materializes the [B, S, V] logits buffer — each sequence chunk's
+    logits live only inside one rematted scan iteration (the classic
+    vocab-parallel fused xent; with V>=128k this removes the largest
+    activation in training by far).  ``table`` is [V, D] (tied) — pass
+    ``lm_head.T``-shaped table for untied heads.
+    """
+    b, s, d = x.shape
+    if s % chunk != 0:
+        chunk = s  # degenerate fallback (smoke shapes)
+    n_chunks = s // chunk
+    tbl = table.astype(compute_dtype)
+    transposed = table.shape[0] == d  # [d, V] (untied lm_head) vs [V, d]
+    eq = "bsd,dv->bsv" if transposed else "bsd,vd->bsv"
+
+    # python loop (not lax.scan): XLA cost analysis counts while bodies
+    # once, and this loop's unembed matmul is a dominant FLOPs term the
+    # roofline must see exactly.  Each chunk is rematted.
+    @jax.checkpoint
+    def chunk_nll(xck, lck, mck):
+        logits = jnp.einsum(
+            eq, xck.astype(compute_dtype), tbl,
+            preferred_element_type=jnp.float32,
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, lck[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        m = mck.astype(jnp.float32)
+        return ((lse - ll) * m).sum(), m.sum()
+
+    nll_sum = jnp.float32(0.0)
+    msum = jnp.float32(0.0)
+    for i in range(n_chunks):
+        sl = slice(i * chunk, (i + 1) * chunk)
+        mck = (
+            mask[:, sl] if mask is not None
+            else jnp.ones((b, chunk), jnp.float32)
+        )
+        nll_c, m_c = chunk_nll(x[:, sl], labels[:, sl], mck)
+        nll_sum = nll_sum + nll_c
+        msum = msum + m_c
+    return nll_sum / jnp.maximum(msum, 1.0)

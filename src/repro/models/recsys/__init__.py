@@ -1,0 +1,4 @@
+"""RecSys models: BERT4Rec over a production-size item embedding table."""
+from repro.models.recsys.bert4rec import BERT4RecConfig
+
+__all__ = ["BERT4RecConfig"]

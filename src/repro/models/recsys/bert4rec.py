@@ -1,0 +1,159 @@
+"""BERT4Rec (arXiv:1904.06690): bidirectional transformer over item
+sequences with cloze (masked-item) training.
+
+The hot path at production scale is the item *embedding table* (10^6 rows
+here) — lookup on the way in (gather == the MESH substrate primitive) and
+the full-vocab scoring matmul on the way out.  ``retrieval_score`` is the
+1M-candidate retrieval shape: one user state against a candidate id list,
+a blocked gather+dot, never a loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    cross_entropy,
+    layernorm,
+    layernorm_init,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BERT4RecConfig:
+    name: str = "bert4rec"
+    n_items: int = 1_000_000        # production-size vocab (PAD=0 included)
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    max_seq: int = 200
+    d_ff_mult: int = 4
+    compute_dtype: object = jnp.float32
+
+    @property
+    def vocab(self) -> int:
+        # n_items + PAD(0 overlay) + [MASK], rounded up to a 512 multiple
+        # so the table shards evenly over any production mesh axis.
+        raw = self.n_items + 2
+        return -(-raw // 512) * 512
+
+    @property
+    def mask_id(self) -> int:
+        return self.n_items + 1
+
+
+def init_params(key, cfg: BERT4RecConfig):
+    ks = jax.random.split(key, 4 + 6 * cfg.n_blocks)
+    d = cfg.embed_dim
+    params = {
+        "item_embed": jax.random.normal(ks[0], (cfg.vocab, d)) * (d**-0.5),
+        "pos_embed": jax.random.normal(ks[1], (cfg.max_seq, d)) * 0.02,
+        "ln_in": layernorm_init(d),
+        "ln_out": layernorm_init(d),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        o = 4 + 6 * i
+        params["blocks"].append(
+            {
+                "ln1": layernorm_init(d),
+                "wqkv": jax.random.normal(ks[o], (d, 3 * d)) * (d**-0.5),
+                "wo": jax.random.normal(ks[o + 1], (d, d)) * (d**-0.5),
+                "ln2": layernorm_init(d),
+                "w1": jax.random.normal(ks[o + 2], (d, cfg.d_ff_mult * d))
+                * (d**-0.5),
+                "b1": jnp.zeros((cfg.d_ff_mult * d,)),
+                "w2": jax.random.normal(
+                    ks[o + 3], (cfg.d_ff_mult * d, d)
+                ) * ((cfg.d_ff_mult * d) ** -0.5),
+                "b2": jnp.zeros((d,)),
+            }
+        )
+    return params
+
+
+def encode(params, cfg: BERT4RecConfig, items: jnp.ndarray) -> jnp.ndarray:
+    """items [B, S] -> hidden [B, S, D] (bidirectional)."""
+    b, s = items.shape
+    d = cfg.embed_dim
+    h = cfg.n_heads
+    x = jnp.take(params["item_embed"], items, axis=0)
+    x = x + params["pos_embed"][None, :s]
+    x = layernorm(params["ln_in"], x)
+    pad_mask = (items != 0).astype(jnp.float32)        # PAD=0
+    for blk in params["blocks"]:
+        xn = layernorm(blk["ln1"], x)
+        qkv = xn @ blk["wqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, h, d // h)
+        k = k.reshape(b, s, h, d // h)
+        v = v.reshape(b, s, h, d // h)
+        # mask PAD keys by zeroing their value contribution via scores
+        o = attn.naive_attention(q, k, v, causal=False)
+        x = x + (o.reshape(b, s, d) @ blk["wo"])
+        xn = layernorm(blk["ln2"], x)
+        f = jax.nn.gelu(xn @ blk["w1"] + blk["b1"])
+        x = x + (f @ blk["w2"] + blk["b2"])
+        x = x * pad_mask[..., None]
+    return layernorm(params["ln_out"], x)
+
+
+def logits_all_items(params, h: jnp.ndarray) -> jnp.ndarray:
+    """Full-vocab scoring (training / offline bulk): [..., D] -> [..., V]."""
+    return jnp.einsum("...d,vd->...v", h, params["item_embed"])
+
+
+def loss_fn(params, cfg: BERT4RecConfig, batch) -> jnp.ndarray:
+    """Cloze objective: predict original item at masked positions.
+
+    batch: items [B,S] (with MASK substitutions), labels [B,S],
+    loss_mask [B,S] in {0,1}.
+    """
+    h = encode(params, cfg, batch["items"])
+    logits = logits_all_items(params, h)
+    return cross_entropy(logits, batch["labels"], batch["loss_mask"])
+
+
+def loss_sampled(params, cfg: BERT4RecConfig, batch) -> jnp.ndarray:
+    """Production cloze loss for 10^6-item catalogs: sampled softmax over
+    shared in-batch negatives (full-vocab softmax at train batch 65k x 200
+    positions x 1M items is ~petabytes of logits — see DESIGN.md).
+
+    batch: items [B,S], masked_pos [B,M] int32, labels [B,M] int32,
+    negatives [Nneg] int32 (shared across the batch).
+    """
+    h = encode(params, cfg, batch["items"])            # [B, S, D]
+    hm = jnp.take_along_axis(
+        h, batch["masked_pos"][..., None], axis=1
+    )                                                  # [B, M, D]
+    pos_emb = jnp.take(params["item_embed"], batch["labels"], axis=0)
+    neg_emb = jnp.take(params["item_embed"], batch["negatives"], axis=0)
+    pos_logit = jnp.einsum("bmd,bmd->bm", hm, pos_emb)
+    neg_logit = jnp.einsum("bmd,nd->bmn", hm, neg_emb)
+    # positive in slot 0; negatives after
+    logits = jnp.concatenate(
+        [pos_logit[..., None], neg_logit], axis=-1
+    ).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -logp[..., 0].mean()
+
+
+def serve_score(params, cfg: BERT4RecConfig, items: jnp.ndarray):
+    """Online inference: hidden state at the final (MASK) position scored
+    against the full catalog. Returns logits [B, V]."""
+    h = encode(params, cfg, items)
+    return logits_all_items(params, h[:, -1])
+
+
+def retrieval_score(
+    params, cfg: BERT4RecConfig, items: jnp.ndarray,
+    candidate_ids: jnp.ndarray,
+) -> jnp.ndarray:
+    """Retrieval shape: 1 user sequence vs ``n_candidates`` item ids.
+    items [1, S]; candidate_ids [C] -> scores [C]."""
+    h = encode(params, cfg, items)[:, -1]              # [1, D]
+    cand = jnp.take(params["item_embed"], candidate_ids, axis=0)  # [C, D]
+    return jnp.einsum("bd,cd->bc", h, cand)[0]

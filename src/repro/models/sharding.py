@@ -1,0 +1,73 @@
+"""Logical activation-sharding constraints.
+
+Model code annotates activations with *logical* axes ('dp', 'tp', 'flat',
+None); this module resolves them against whatever mesh is ambient at trace
+time — the same model works on (data, model), (pod, data, model), a test
+mesh, or no mesh at all (constraints become no-ops on a single device).
+
+This mirrors the MaxText/T5X "logical axis rules" pattern in ~40 lines.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_DP_AXES = ("pod", "data")
+_TP_AXIS = "model"
+
+
+def ambient_mesh():
+    try:
+        from jax._src import mesh as mesh_lib
+
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:  # pragma: no cover - private-API guard
+        pass
+    return None
+
+
+def _resolve(mesh, logical):
+    names = mesh.axis_names
+    if logical is None:
+        return None
+    if logical == "dp":
+        axes = tuple(a for a in _DP_AXES if a in names)
+        return axes if axes else None
+    if logical == "tp":
+        return _TP_AXIS if _TP_AXIS in names else None
+    if logical == "flat":
+        return tuple(names)
+    if logical in names:
+        return logical
+    return None
+
+
+def _divides(dim: int, axes, mesh) -> bool:
+    if axes is None:
+        return True
+    import math
+
+    group = axes if isinstance(axes, tuple) else (axes,)
+    k = math.prod(mesh.shape[a] for a in group)
+    return k > 0 and dim % k == 0
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint with logical names; silent no-op without a
+    mesh, and per-dim fallback to None when sizes don't divide."""
+    mesh = ambient_mesh()
+    if mesh is None or x is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(logical_axes)} axes for rank-{x.ndim} array"
+        )
+    spec = []
+    for dim, logical in zip(x.shape, logical_axes):
+        axes = _resolve(mesh, logical)
+        spec.append(axes if _divides(dim, axes, mesh) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

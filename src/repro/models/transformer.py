@@ -1,0 +1,461 @@
+"""Transformer LM family: dense / GQA / local:global interleave / MoE /
+MoE:dense interleave.
+
+One implementation covers all five assigned LM architectures; differences
+are pure config.  Layers are scanned over *periods* (period = lcm of the
+attention pattern and the MoE interleave): each position j in the period
+owns its own stacked parameter pytree ``[n_periods, ...]``, the scan body
+unrolls the period statically — exact FLOPs in cost analysis, no dead
+branches, heterogeneous (dense|MoE) layers stack cleanly, and the HLO
+stays small enough that the 512-device dry-run compiles on one CPU core.
+
+Layouts: activations [B, S, D]; caches {k,v}: [L, B, S, KvH, hd].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    cross_entropy,
+    fused_unembed_cross_entropy,
+    dense,
+    dense_init,
+    embed,
+    embed_init,
+    rmsnorm,
+    rmsnorm_init,
+    rope,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+from repro.models.moe import MoEConfig, moe_ffn, moe_init
+from repro.models.sharding import constrain
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10_000.0
+    moe: MoEConfig | None = None
+    moe_interleave: int = 1           # layer i is MoE iff i % k == k-1
+    # (n_local, n_global) attention pattern per period; None = all full.
+    local_global: tuple[int, int] | None = None
+    window: int = 1024
+    parallel_block: bool = False      # command-r style parallel attn+ffn
+    tie_embeddings: bool = True
+    remat: bool = True
+    attn_block_size: int = 1024
+    # sequences >= this threshold shard the *sequence* dim of q over the
+    # 'model' axis in global-attention layers (context parallelism) —
+    # GQA kv-head counts (4-8) cannot fill a 16-wide model axis, so head
+    # sharding leaves 0.5GB f32 score blocks replicated; seq sharding
+    # splits them 16x.
+    context_parallel_threshold: int = 16384
+    compute_dtype: Any = jnp.bfloat16
+    # False => python-loop over periods (exact XLA cost analysis; the
+    # roofline harness compiles 1- and 2-period unrolled variants and
+    # extrapolates — while-loop bodies are counted once by XLA).
+    scan_layers: bool = True
+
+    @property
+    def period(self) -> int:
+        attn_p = 1 if self.local_global is None else sum(self.local_global)
+        moe_p = self.moe_interleave if self.moe is not None else 1
+        return math.lcm(attn_p, moe_p)
+
+    @property
+    def layer_kinds(self) -> tuple[tuple[bool, bool], ...]:
+        """(is_local, is_moe) per position within one period."""
+        kinds = []
+        for j in range(self.period):
+            if self.local_global is None:
+                is_local = False
+            else:
+                n_local, _ = self.local_global
+                is_local = (j % sum(self.local_global)) < n_local
+            if self.moe is None:
+                is_moe = False
+            else:
+                is_moe = (j % self.moe_interleave) == self.moe_interleave - 1
+            kinds.append((is_local, is_moe))
+        return tuple(kinds)
+
+    @property
+    def n_periods(self) -> int:
+        assert self.n_layers % self.period == 0, (
+            f"{self.name}: n_layers={self.n_layers} not divisible by "
+            f"period={self.period}"
+        )
+        return self.n_layers // self.period
+
+    def flops_per_token(self) -> float:
+        """Forward matmul FLOPs per token (the 2N term of 6ND)."""
+        d, hd = self.d_model, self.head_dim
+        attn_proj = 2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd
+        attn_proj += 2 * self.n_heads * hd * d
+        total = 0.0
+        for (_is_local, is_moe) in self.layer_kinds:
+            if is_moe:
+                ffn = 2 * 3 * d * self.moe.d_ff * self.moe.top_k
+                ffn += 2 * 3 * d * self.moe.d_ff * self.moe.n_shared_experts
+                ffn += 2 * d * self.moe.n_experts
+            else:
+                ffn = 2 * 3 * d * self.d_ff
+            total += attn_proj + ffn
+        total *= self.n_periods
+        total += 2 * d * self.vocab
+        return total
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: LMConfig, is_moe: bool):
+    ks = jax.random.split(key, 8)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "ln_attn": rmsnorm_init(d),
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kvh * hd),
+        "wv": dense_init(ks[2], d, kvh * hd),
+        "wo": dense_init(ks[3], h * hd, d),
+        "ln_ffn": rmsnorm_init(d),
+    }
+    if is_moe:
+        p["moe"] = moe_init(ks[4], cfg.moe, d)
+    else:
+        p["ffn"] = swiglu_init(ks[4], d, cfg.d_ff)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    period, n_periods = cfg.period, cfg.n_periods
+    kinds = cfg.layer_kinds
+    layer_keys = jax.random.split(k_layers, cfg.n_layers).reshape(
+        n_periods, period, 2
+    )
+    stacks = []
+    for j, (_is_local, is_moe) in enumerate(kinds):
+        stacks.append(
+            jax.vmap(lambda k, m=is_moe: _layer_init(k, cfg, m))(
+                layer_keys[:, j]
+            )
+        )
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab, cfg.d_model),
+        "layers": tuple(stacks),
+        "ln_out": rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab)
+    return params
+
+
+def param_count(cfg: LMConfig) -> int:
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn_p = d * (h + 2 * kvh) * hd + h * hd * d + 2 * d
+    total = 0
+    for (_l, is_moe) in cfg.layer_kinds:
+        if is_moe:
+            ffn = d * cfg.moe.n_experts
+            ffn += cfg.moe.n_experts * 3 * d * cfg.moe.d_ff
+            ffn += cfg.moe.n_shared_experts * 3 * d * cfg.moe.d_ff
+        else:
+            ffn = 3 * d * cfg.d_ff
+        total += attn_p + ffn
+    total *= cfg.n_periods
+    total += cfg.vocab * d + d
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab
+    return total
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    attn_p = d * (h + 2 * kvh) * hd + h * hd * d + 2 * d
+    total = 0
+    for (_l, is_moe) in cfg.layer_kinds:
+        if is_moe:
+            ffn = d * cfg.moe.n_experts
+            ffn += (
+                cfg.moe.top_k + cfg.moe.n_shared_experts
+            ) * 3 * d * cfg.moe.d_ff
+        else:
+            ffn = 3 * d * cfg.d_ff
+        total += attn_p + ffn
+    total *= cfg.n_periods
+    total += cfg.vocab * d + d
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab
+    return total
+
+
+# --------------------------------------------------------------------------
+# layer bodies
+# --------------------------------------------------------------------------
+
+def _attention_block(lp, x, cfg: LMConfig, is_local: bool, positions):
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rmsnorm(lp["ln_attn"], x)
+    q = dense(lp["wq"], xn, cfg.compute_dtype).reshape(b, s, h, hd)
+    k = dense(lp["wk"], xn, cfg.compute_dtype).reshape(b, s, kvh, hd)
+    v = dense(lp["wv"], xn, cfg.compute_dtype).reshape(b, s, kvh, hd)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if is_local and s > cfg.window:
+        o = attn.chunked_local_attention(q, k, v, window=cfg.window)
+    elif s <= 2 * cfg.attn_block_size:
+        o = attn.naive_attention(
+            q, k, v, causal=True,
+            window=cfg.window if is_local else None,
+        )
+    else:
+        o = attn.blocked_attention(
+            q, k, v, causal=True,
+            window=cfg.window if is_local else None,
+            block_size=cfg.attn_block_size,
+            use_scan=cfg.scan_layers,
+        )
+    o = constrain(o.reshape(b, s, h, hd), "dp", None, "tp", None)
+    o = o.reshape(b, s, h * hd)
+    out = constrain(dense(lp["wo"], o, cfg.compute_dtype), "dp", None, None)
+    return out, (k, v)
+
+
+def _ffn_block(lp, x, cfg: LMConfig, is_moe: bool):
+    xn = rmsnorm(lp["ln_ffn"], x)
+    if is_moe:
+        y, aux = moe_ffn(lp["moe"], xn, cfg.moe, cfg.compute_dtype)
+        return constrain(y, "dp", None, None), aux["lb_loss"] + aux["z_loss"]
+    y = swiglu(lp["ffn"], xn, cfg.compute_dtype)
+    return constrain(y, "dp", None, None), jnp.float32(0.0)
+
+
+def _layer(lp, x, cfg: LMConfig, is_local: bool, is_moe: bool, positions):
+    a, _kv = _attention_block(lp, x, cfg, is_local, positions)
+    if cfg.parallel_block:
+        f, aux = _ffn_block(lp, x, cfg, is_moe)
+        return x + a + f, aux
+    x = x + a
+    f, aux = _ffn_block(lp, x, cfg, is_moe)
+    return x + f, aux
+
+
+def _logits(params, cfg: LMConfig, x):
+    x = rmsnorm(params["ln_out"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cfg.compute_dtype)
+    else:
+        logits = dense(params["lm_head"], x, cfg.compute_dtype)
+    spec = ("dp",) + (None,) * (logits.ndim - 2) + ("tp",)
+    return constrain(logits, *spec)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """tokens [B, S] -> (final hidden states [B, S, D], aux loss)."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    x = constrain(x, "dp", None, None)
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    kinds = cfg.layer_kinds
+
+    layer_fn = _layer
+    if cfg.remat:
+        # per-layer remat: backward recomputes one layer at a time, so the
+        # live set is (period inputs) + (one layer's internals).
+        layer_fn = jax.checkpoint(_layer, static_argnums=(2, 3, 4))
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        for j, (is_local, is_moe) in enumerate(kinds):
+            x, a = layer_fn(
+                period_params[j], x, cfg, is_local, is_moe, positions
+            )
+            aux = aux + a
+        return (x, aux), None
+
+    body = period_body
+    if cfg.remat:
+        body = jax.checkpoint(period_body)
+    carry = (x, jnp.float32(0.0))
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(body, carry, params["layers"])
+    else:
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            carry, _ = body(carry, pp)
+    x, aux = carry
+    return x, aux
+
+
+def forward(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """tokens [B, S] -> (logits [B, S, V], scalar aux loss)."""
+    x, aux = encode(params, cfg, tokens)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: LMConfig, batch) -> jnp.ndarray:
+    x, aux = encode(params, cfg, batch["tokens"])
+    x = rmsnorm(params["ln_out"], x)
+    table = (
+        params["embed"]["table"] if cfg.tie_embeddings
+        else params["lm_head"]["w"]
+    )
+    ce = fused_unembed_cross_entropy(
+        table, x, batch["labels"], batch.get("mask"),
+        compute_dtype=cfg.compute_dtype,
+    )
+    return ce + 1e-2 * aux
+
+
+# --------------------------------------------------------------------------
+# decode (KV cache)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg: LMConfig, tokens: jnp.ndarray):
+    """Full-sequence forward that also returns the KV cache — the serving
+    warm-up path.  Returns (last-token logits [B, V], cache): production
+    prefill only needs the logits that seed decoding; materializing
+    [B, S, V] would be ~2 orders of magnitude more output HBM."""
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    positions = jnp.arange(s)[None, :].astype(jnp.int32)
+    kinds = cfg.layer_kinds
+
+    def period_body(x, period_params):
+        ks, vs = [], []
+        for j, (is_local, is_moe) in enumerate(kinds):
+            lp = period_params[j]
+            a, (k, v) = _attention_block(lp, x, cfg, is_local, positions)
+            if cfg.parallel_block:
+                f, _ = _ffn_block(lp, x, cfg, is_moe)
+                x = x + a + f
+            else:
+                x = x + a
+                f, _ = _ffn_block(lp, x, cfg, is_moe)
+                x = x + f
+            ks.append(k.astype(jnp.bfloat16))
+            vs.append(v.astype(jnp.bfloat16))
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    if cfg.scan_layers:
+        x, (k_all, v_all) = jax.lax.scan(period_body, x, params["layers"])
+    else:
+        ks_list, vs_list = [], []
+        for i in range(cfg.n_periods):
+            pp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            x, (kp, vp) = period_body(x, pp)
+            ks_list.append(kp)
+            vs_list.append(vp)
+        k_all = jnp.stack(ks_list)
+        v_all = jnp.stack(vs_list)
+    cache = {
+        "k": k_all.reshape((cfg.n_layers,) + k_all.shape[2:]),
+        "v": v_all.reshape((cfg.n_layers,) + v_all.shape[2:]),
+    }
+    return _logits(params, cfg, x[:, -1:])[:, 0], cache
+
+
+def serve_step(params, cfg: LMConfig, cache, token: jnp.ndarray,
+               pos: jnp.ndarray):
+    """One decode step: token [B] ids at position ``pos`` (scalar int32)
+    against a cache of static max length -> (logits [B, V], new cache)."""
+    b = token.shape[0]
+    x = embed(params["embed"], token[:, None], cfg.compute_dtype)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    kinds = cfg.layer_kinds
+    period = cfg.period
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    k_cache = cache["k"].reshape(
+        (cfg.n_periods, period) + cache["k"].shape[1:]
+    )
+    v_cache = cache["v"].reshape(
+        (cfg.n_periods, period) + cache["v"].shape[1:]
+    )
+
+    def period_body(x, scan_in):
+        period_params, k_per, v_per = scan_in
+        k_new, v_new = [], []
+        for j, (is_local, is_moe) in enumerate(kinds):
+            lp = period_params[j]
+            xn = rmsnorm(lp["ln_attn"], x)
+            q = dense(lp["wq"], xn, cfg.compute_dtype).reshape(b, 1, h, hd)
+            k = dense(lp["wk"], xn, cfg.compute_dtype).reshape(b, 1, kvh, hd)
+            v = dense(lp["wv"], xn, cfg.compute_dtype).reshape(b, 1, kvh, hd)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                k_per[j], k.astype(k_per[j].dtype), pos, axis=1
+            )
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                v_per[j], v.astype(v_per[j].dtype), pos, axis=1
+            )
+            o = attn.decode_attention(
+                q, kc, vc, pos + 1,
+                window=cfg.window if is_local else None,
+            )
+            a = dense(lp["wo"], o.reshape(b, 1, h * hd), cfg.compute_dtype)
+            if cfg.parallel_block:
+                f, _ = _ffn_block(lp, x, cfg, is_moe)
+                x = x + a + f
+            else:
+                x = x + a
+                f, _ = _ffn_block(lp, x, cfg, is_moe)
+                x = x + f
+            k_new.append(kc)
+            v_new.append(vc)
+        return x, (jnp.stack(k_new), jnp.stack(v_new))
+
+    if cfg.scan_layers:
+        x, (k_out, v_out) = jax.lax.scan(
+            period_body, x, (params["layers"], k_cache, v_cache)
+        )
+    else:
+        ks_list, vs_list = [], []
+        for i in range(cfg.n_periods):
+            sl = jax.tree.map(
+                lambda a, i=i: a[i], (params["layers"], k_cache, v_cache)
+            )
+            x, (kp, vp) = period_body(x, sl)
+            ks_list.append(kp)
+            vs_list.append(vp)
+        k_out = jnp.stack(ks_list)
+        v_out = jnp.stack(vs_list)
+    new_cache = {
+        "k": k_out.reshape(cache["k"].shape),
+        "v": v_out.reshape(cache["v"].shape),
+    }
+    return _logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,11 @@
+"""Hypergraph partitioning: the paper's central design axis."""
+from repro.partition.base import PartitionPlan, PartitionStats, build_plan
+from repro.partition.strategies import STRATEGIES, partition
+
+__all__ = [
+    "PartitionPlan",
+    "PartitionStats",
+    "build_plan",
+    "STRATEGIES",
+    "partition",
+]

@@ -1,0 +1,16 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.analysis import (
+    HW,
+    CollectiveStats,
+    RooflineReport,
+    analyze_task,
+    parse_collectives,
+)
+
+__all__ = [
+    "HW",
+    "CollectiveStats",
+    "RooflineReport",
+    "analyze_task",
+    "parse_collectives",
+]

@@ -1,0 +1,260 @@
+"""Three-term roofline from the compiled SPMD module.
+
+Methodology (EXPERIMENTS.md §Roofline):
+
+* ``compiled.cost_analysis()`` supplies HLO FLOPs and bytes — but XLA
+  counts while-loop bodies ONCE (verified empirically in this repo), so a
+  production scan-over-layers program under-reports by ~n_layers.  We
+  therefore compile *unrolled* 1-period and 2-period model variants and
+  extrapolate: ``total = f1 + (n_periods - 1) * (f2 - f1)``.  The
+  difference f2-f1 isolates exactly one period; f1 - (f2-f1) is the fixed
+  overhead (embedding, unembed, optimizer).  Verified against analytic
+  6ND within a few percent.
+
+* Collective bytes are NOT in cost_analysis: we parse the partitioned
+  ``compiled.as_text()`` and sum result-buffer sizes of all-gather /
+  all-reduce / reduce-scatter / all-to-all / collective-permute ops, with
+  the same 1-vs-2-period differencing.  Shapes in the partitioned module
+  are already per-device.  Convention: all-reduce counts 2x (ring RS+AG);
+  others count their result bytes.
+
+* Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+  (3D torus, ~6 links usable; we charge the per-device collective bytes
+  against one link's 50 GB/s lane to stay conservative).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12         # bf16 per chip
+    hbm_bw: float = 819e9              # bytes/s per chip
+    ici_bw: float = 50e9               # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# shape like f32[1,2048,512]{2,1,0} or bf16[16]
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    if not dims:
+        return nbytes
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    def merged(self, other: "CollectiveStats", scale: float = 1.0):
+        counts = dict(self.counts)
+        by = dict(self.bytes_by_kind)
+        for k, v in other.counts.items():
+            counts[k] = counts.get(k, 0) + int(v * scale)
+        for k, v in other.bytes_by_kind.items():
+            by[k] = by.get(k, 0.0) + v * scale
+        return CollectiveStats(counts, by)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device result bytes of every collective op in (partitioned)
+    HLO text.  all-reduce counted 2x (ring = reduce-scatter + all-gather
+    over the same payload)."""
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    bytes_by: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(.*?)\s+(\S+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2).split(".")[0]
+        # fusion(...) etc will not match a collective name
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        size = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        mult = 2.0 if kind == "all-reduce" else 1.0
+        counts[kind] += 1
+        bytes_by[kind] += size * mult
+    return CollectiveStats(counts, bytes_by)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    n_devices: int
+    hlo_flops: float                  # global (all devices)
+    hlo_bytes: float                  # global HBM traffic
+    collective_bytes_per_dev: float   # per-device wire bytes
+    collective_counts: dict[str, int]
+    collective_bytes_by_kind: dict[str, float]
+    model_flops: float
+    peak_memory_per_dev: float        # bytes (from memory_analysis)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finish(self, hw: HW = HW()):
+        self.compute_s = self.hlo_flops / (self.n_devices * hw.peak_flops)
+        self.memory_s = self.hlo_bytes / (self.n_devices * hw.hbm_bw)
+        self.collective_s = self.collective_bytes_per_dev / hw.ici_bw
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-model step time: dominant term (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS / (devices x peak x step_time) — the MFU the
+        roofline model predicts if the dominant term is the wall."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        denom = self.n_devices * HW().peak_flops * t
+        return self.model_flops / denom
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "devices": self.n_devices,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_dev": self.collective_bytes_per_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_mem_gb": self.peak_memory_per_dev / 1e9,
+        }
+
+
+def _cost(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _peak_memory(compiled) -> float:
+    ma = compiled.memory_analysis()
+    try:
+        return float(
+            ma.temp_size_in_bytes
+            + ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes
+        )
+    except AttributeError:
+        return 0.0
+
+
+def analyze_compiled(name, compiled, n_devices, model_flops=0.0):
+    flops, nbytes = _cost(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return RooflineReport(
+        name=name,
+        n_devices=n_devices,
+        hlo_flops=flops * n_devices,
+        hlo_bytes=nbytes * n_devices,
+        collective_bytes_per_dev=coll.total_bytes,
+        collective_counts=coll.counts,
+        collective_bytes_by_kind=coll.bytes_by_kind,
+        model_flops=model_flops,
+        peak_memory_per_dev=_peak_memory(compiled),
+    ).finish()
+
+
+def analyze_task(task, *, extrapolate: tuple | None = None) -> RooflineReport:
+    """Lower+compile ``task`` and derive the three roofline terms.
+
+    ``extrapolate=(report_1p, report_2p, n_periods)`` applies the
+    unrolled-differencing correction for scan-over-layer programs:
+    ``total = r1 + (n_periods - 1) * (r2 - r1)`` per additive field.
+    """
+    lowered = task.lower()
+    compiled = lowered.compile()
+    base = analyze_compiled(
+        task.name, compiled, task_n_devices(task), task.model_flops_per_step
+    )
+    if extrapolate is not None:
+        r1, r2, n_periods = extrapolate
+        k = n_periods - 1
+        base.hlo_flops = r1.hlo_flops + k * (r2.hlo_flops - r1.hlo_flops)
+        base.hlo_bytes = r1.hlo_bytes + k * (r2.hlo_bytes - r1.hlo_bytes)
+        base.collective_bytes_per_dev = (
+            r1.collective_bytes_per_dev
+            + k * (r2.collective_bytes_per_dev - r1.collective_bytes_per_dev)
+        )
+        base.collective_bytes_by_kind = {
+            kk: r1.collective_bytes_by_kind.get(kk, 0.0)
+            + k * (
+                r2.collective_bytes_by_kind.get(kk, 0.0)
+                - r1.collective_bytes_by_kind.get(kk, 0.0)
+            )
+            for kk in set(r1.collective_bytes_by_kind)
+            | set(r2.collective_bytes_by_kind)
+        }
+        base.finish()
+    return base
+
+
+def task_n_devices(task) -> int:
+    import math
+
+    return math.prod(task.mesh.devices.shape)

@@ -1,0 +1,42 @@
+"""Sparse/ragged primitives: the substrate under the MESH engine.
+
+JAX has no native EmbeddingBag and only BCOO sparse; every irregular
+aggregation in this framework funnels through the segment ops in this
+package (``jnp.take`` gathers + ``jax.ops.segment_*`` reductions), which is
+exactly the regime the MESH paper's gather/combine/scatter supersteps
+occupy.
+"""
+from repro.sparse.segment import (
+    Monoid,
+    MONOIDS,
+    edge_sharded,
+    mp_segment_max,
+    mp_segment_min,
+    mp_segment_sum,
+    segment_reduce,
+    segment_softmax,
+    segment_mean,
+    segment_std,
+    segment_logsumexp,
+)
+from repro.sparse.embedding_bag import embedding_bag, EmbeddingBagSpec
+from repro.sparse.sampler import NeighborSampler, SampledBlock, build_csr
+
+__all__ = [
+    "Monoid",
+    "MONOIDS",
+    "edge_sharded",
+    "mp_segment_sum",
+    "mp_segment_max",
+    "mp_segment_min",
+    "segment_reduce",
+    "segment_softmax",
+    "segment_mean",
+    "segment_std",
+    "segment_logsumexp",
+    "embedding_bag",
+    "EmbeddingBagSpec",
+    "NeighborSampler",
+    "SampledBlock",
+    "build_csr",
+]

@@ -1,0 +1,97 @@
+"""EmbeddingBag built from gather + segment-reduce.
+
+JAX has no ``nn.EmbeddingBag``; this is the canonical TPU-native
+construction: ``jnp.take`` over the (possibly vocab-sharded) table followed
+by a per-bag segment reduction.  The same primitive serves three masters in
+this framework:
+
+* recsys multi-hot field pooling (BERT4Rec side features / DLRM-style),
+* the MESH engine's message delivery (a bag == the incidence list of one
+  hyperedge),
+* GNN neighborhood pooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_mean, segment_reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingBagSpec:
+    vocab_size: int
+    dim: int
+    mode: str = "sum"  # sum | mean | max
+    dtype: jnp.dtype = jnp.float32
+
+    def init(self, key: jax.Array) -> jnp.ndarray:
+        scale = self.dim**-0.5
+        return (
+            jax.random.normal(key, (self.vocab_size, self.dim)) * scale
+        ).astype(self.dtype)
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    bag_ids: jnp.ndarray,
+    num_bags: int,
+    *,
+    mode: str = "sum",
+    weights: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Pool rows of ``table`` selected by ``indices`` into ``num_bags`` bags.
+
+    Args:
+      table: ``[vocab, dim]`` embedding table.
+      indices: ``[nnz]`` int row ids (flattened ragged multi-hot).
+      bag_ids: ``[nnz]`` int bag id per index, in ``[0, num_bags)``.
+      num_bags: static bag count.
+      mode: ``sum`` | ``mean`` | ``max``.
+      weights: optional ``[nnz]`` per-sample weights (sum/mean only).
+    """
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    if mode == "mean":
+        return segment_mean(rows, bag_ids, num_bags)
+    if mode == "max":
+        out = segment_reduce(rows, bag_ids, num_bags, "max")
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    return segment_reduce(rows, bag_ids, num_bags, "sum")
+
+
+def embedding_bag_dense(
+    table: jnp.ndarray,
+    indices: jnp.ndarray,
+    *,
+    mode: str = "sum",
+    pad_id: int | None = None,
+) -> jnp.ndarray:
+    """Rectangular variant: ``indices [batch, bag_width]`` (padded multi-hot).
+
+    Preferred on TPU when bag widths are bounded: the segment reduce becomes
+    a dense masked reduction — no scatter at all.
+    """
+    rows = jnp.take(table, indices, axis=0)  # [batch, width, dim]
+    if pad_id is not None:
+        mask = (indices != pad_id)[..., None].astype(rows.dtype)
+        rows = rows * mask
+        denom = jnp.maximum(mask.sum(axis=1), 1.0)
+    else:
+        denom = jnp.full(
+            rows.shape[:1] + rows.shape[2:], rows.shape[1], rows.dtype
+        )
+    if mode == "mean":
+        return rows.sum(axis=1) / denom
+    if mode == "max":
+        if pad_id is not None:
+            rows = jnp.where(
+                (indices == pad_id)[..., None], -jnp.inf, rows
+            )
+        out = rows.max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0)
+    return rows.sum(axis=1)

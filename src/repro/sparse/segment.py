@@ -1,0 +1,259 @@
+"""Segment reductions — the single primitive under all MESH supersteps.
+
+A MESH superstep is ``gather -> per-edge transform -> combine-by-key``.
+The combine step must be a commutative monoid so that (a) GraphX-style
+pre-aggregation before the network hop is legal, and (b) XLA may reassociate
+freely.  This module defines the monoid registry (the JAX analogue of the
+paper's Algebird auto-derived ``MessageCombiner``) and the segment kernels.
+
+All functions are shard_map-friendly: static ``num_segments``, no
+data-dependent shapes.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Edge-sharded execution context (the MESH replicated backend, exposed to
+# every consumer of segment ops).  Inside ``edge_sharded(axes)`` each
+# segment reduction computes a *local* partial over this shard's edges and
+# merges across shards with the matching collective (psum/pmax/pmin) —
+# models stay oblivious; only the executor wraps them in shard_map.
+# ---------------------------------------------------------------------------
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def edge_sharded(axes):
+    prev = getattr(_CTX, "axes", None)
+    _CTX.axes = axes
+    try:
+        yield
+    finally:
+        _CTX.axes = prev
+
+
+def _merge_axes():
+    return getattr(_CTX, "axes", None)
+
+
+def _psum(x):
+    axes = _merge_axes()
+    return jax.lax.psum(x, axes) if axes else x
+
+
+def _pmax(x):
+    """Differentiable cross-shard max: pmax has no JVP rule, so merge via
+    a stop-gradient pmax and re-select locally — the cotangent flows to
+    the shard(s) holding the max (exact up to fp ties across shards)."""
+    axes = _merge_axes()
+    if not axes:
+        return x
+    m = jax.lax.pmax(jax.lax.stop_gradient(x), axes)
+    return jnp.where(x >= m, x, jax.lax.stop_gradient(m))
+
+
+def _pmin(x):
+    axes = _merge_axes()
+    if not axes:
+        return x
+    m = jax.lax.pmin(jax.lax.stop_gradient(x), axes)
+    return jnp.where(x <= m, x, jax.lax.stop_gradient(m))
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """Commutative monoid: identity + combine + a fused segment reduction.
+
+    ``segment`` must satisfy ``segment(x, ids, n)[i] == fold(combine,
+    identity, [x[j] for j where ids[j]==i])`` — the law the property tests
+    assert.
+    """
+
+    name: str
+    identity: Callable[[jnp.dtype], jnp.ndarray]
+    combine: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]
+    segment: Callable[..., jnp.ndarray]
+
+    def identity_like(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.full((), self.identity(x.dtype), dtype=x.dtype)
+
+
+def _min_identity(dtype) -> jnp.ndarray:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype)
+
+
+def _max_identity(dtype) -> jnp.ndarray:
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(-jnp.inf, dtype)
+    return jnp.array(jnp.iinfo(dtype).min, dtype)
+
+
+MONOIDS: dict[str, Monoid] = {
+    "sum": Monoid(
+        "sum",
+        identity=lambda dt: jnp.zeros((), dt),
+        combine=jnp.add,
+        segment=jax.ops.segment_sum,
+    ),
+    "max": Monoid(
+        "max",
+        identity=_max_identity,
+        combine=jnp.maximum,
+        segment=jax.ops.segment_max,
+    ),
+    "min": Monoid(
+        "min",
+        identity=_min_identity,
+        combine=jnp.minimum,
+        segment=jax.ops.segment_min,
+    ),
+    "prod": Monoid(
+        "prod",
+        identity=lambda dt: jnp.ones((), dt),
+        combine=jnp.multiply,
+        segment=jax.ops.segment_prod,
+    ),
+    "or": Monoid(
+        "or",
+        identity=lambda dt: jnp.zeros((), dt),
+        combine=jnp.logical_or,
+        segment=lambda x, ids, num_segments, **kw: jax.ops.segment_max(
+            x.astype(jnp.int32), ids, num_segments, **kw
+        ).astype(bool),
+    ),
+}
+
+
+def resolve_monoid(combiner: str | Monoid) -> Monoid:
+    if isinstance(combiner, Monoid):
+        return combiner
+    try:
+        return MONOIDS[combiner]
+    except KeyError as e:  # pragma: no cover - defensive
+        raise ValueError(
+            f"unknown combiner {combiner!r}; known: {sorted(MONOIDS)}"
+        ) from e
+
+
+def derive_monoid_for(x: jnp.ndarray) -> Monoid:
+    """Auto-derive a MessageCombiner from the message type.
+
+    The JAX analogue of MESH's Algebird import: floats/ints default to the
+    ``sum`` monoid, bools to ``or``.  Algorithms needing max/min (label
+    propagation, SSSP) say so explicitly, exactly as ``msg.max()`` does in
+    the paper's listings.
+    """
+    if jnp.issubdtype(x.dtype, jnp.bool_):
+        return MONOIDS["or"]
+    return MONOIDS["sum"]
+
+
+@partial(jax.jit, static_argnames=("num_segments", "monoid_name"))
+def _segment_reduce_impl(data, segment_ids, num_segments, monoid_name):
+    monoid = MONOIDS[monoid_name]
+    return monoid.segment(data, segment_ids, num_segments=num_segments)
+
+
+def segment_reduce(
+    data: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    combiner: str | Monoid = "sum",
+    *,
+    fill_identity: bool = False,
+) -> jnp.ndarray:
+    """Reduce ``data`` rows by key. Empty segments get 0 (sum/or) or the
+    monoid identity when ``fill_identity`` (max/min return dtype-min/max
+    from XLA already, which *is* the identity)."""
+    monoid = resolve_monoid(combiner)
+    out = monoid.segment(data, segment_ids, num_segments=num_segments)
+    if fill_identity and monoid.name in ("max", "min"):
+        # segment_max/min already emit -inf/+inf (or int extremes) for empty
+        # segments on float inputs; normalize ints too for predictability.
+        pass
+    return out
+
+
+def mp_segment_sum(data, segment_ids, num_segments):
+    """segment_sum that merges across edge shards when inside
+    ``edge_sharded`` (local partial + psum)."""
+    return _psum(jax.ops.segment_sum(data, segment_ids, num_segments))
+
+
+def mp_segment_max(data, segment_ids, num_segments):
+    return _pmax(jax.ops.segment_max(data, segment_ids, num_segments))
+
+
+def mp_segment_min(data, segment_ids, num_segments):
+    return _pmin(jax.ops.segment_min(data, segment_ids, num_segments))
+
+
+def segment_count(segment_ids: jnp.ndarray, num_segments: int) -> jnp.ndarray:
+    return mp_segment_sum(
+        jnp.ones_like(segment_ids, dtype=jnp.int32), segment_ids,
+        num_segments,
+    )
+
+
+def segment_mean(
+    data: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    total = mp_segment_sum(data, segment_ids, num_segments)
+    count = segment_count(segment_ids, num_segments)
+    count = jnp.maximum(count, 1).astype(data.dtype)
+    return total / count.reshape((-1,) + (1,) * (data.ndim - 1))
+
+
+def segment_std(
+    data: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Per-segment standard deviation (PNA's ``std`` aggregator)."""
+    mean = segment_mean(data, segment_ids, num_segments)
+    sq_mean = segment_mean(jnp.square(data), segment_ids, num_segments)
+    return jnp.sqrt(jnp.maximum(sq_mean - jnp.square(mean), 0.0) + eps)
+
+
+def segment_softmax(
+    logits: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """Numerically-stable softmax within each segment (GAT edge softmax).
+    Edge-shard-aware: max and denominator merge across shards."""
+    seg_max = mp_segment_max(logits, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    denom = mp_segment_sum(exp, segment_ids, num_segments)
+    denom = jnp.maximum(denom[segment_ids], 1e-30)
+    return exp / denom
+
+
+def segment_logsumexp(
+    logits: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    seg_max = mp_segment_max(logits, segment_ids, num_segments)
+    safe_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    exp = jnp.exp(logits - safe_max[segment_ids])
+    s = mp_segment_sum(exp, segment_ids, num_segments)
+    return safe_max + jnp.log(jnp.maximum(s, 1e-30))
+
+
+def segment_normalize(
+    data: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """Divide each row by its segment's sum (used by PageRank broadcast)."""
+    denom = jax.ops.segment_sum(data, segment_ids, num_segments)
+    denom = jnp.where(jnp.abs(denom) < 1e-30, 1.0, denom)
+    return data / denom[segment_ids]

@@ -1,0 +1,28 @@
+"""Training substrate: optimizer, train step factory, checkpointing."""
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    schedule,
+)
+from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.checkpoint import (
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "schedule",
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "latest_checkpoint",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,87 @@
+"""AdamW, implemented directly on pytrees (no optax dependency).
+
+fp32 moments regardless of param dtype; decoupled weight decay; global-norm
+gradient clipping; linear warmup + cosine decay schedule helper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def adamw_init(params: Params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu2 / bc1
+        nhat = nu2 / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), mu2, nu2
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = jax.tree.leaves(grads)
+    mu_leaves = jax.tree.leaves(opt_state["mu"])
+    nu_leaves = jax.tree.leaves(opt_state["nu"])
+    out = [upd(*t) for t in zip(p_leaves, g_leaves, mu_leaves, nu_leaves)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+    new_mu = jax.tree.unflatten(treedef, [t[1] for t in out])
+    new_nu = jax.tree.unflatten(treedef, [t[2] for t in out])
+    return new_params, {
+        "mu": new_mu, "nu": new_nu, "step": step
+    }, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,59 @@
+"""Distributed == local engine equality, executed in a subprocess with
+forced host devices (the parent test process must keep 1 device)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.data import make_dataset
+    from repro.partition import partition, STRATEGIES
+    from repro.algorithms import (pagerank_spec, pagerank_entropy_spec,
+        label_propagation_spec, shortest_paths_spec, random_walk_spec,
+        connected_components_spec, run_local, run_distributed)
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ('data',))
+    hg = make_dataset('apache', scale=0.04, seed=3)
+    specs = {
+      'pagerank': pagerank_spec(hg, iters=6),
+      'pr_entropy': pagerank_entropy_spec(hg, iters=6),
+      'labelprop': label_propagation_spec(hg, iters=8),
+      'sssp': shortest_paths_spec(hg, source=1, max_iters=16),
+      'randwalk': random_walk_spec(hg, iters=6),
+      'cc': connected_components_spec(hg, max_iters=32),
+    }
+    failures = []
+    for strat in ['random_vertex_cut', 'random_both_cut',
+                  'hybrid_hyperedge_cut', 'greedy_vertex_cut']:
+        kw = {'chunk': 32} if 'greedy' in strat else {}
+        plan = partition(strat, hg, 8, **kw)
+        for name, spec in specs.items():
+            ref = run_local(spec)
+            for backend in ['replicated', 'sharded']:
+                got = run_distributed(spec, plan, mesh, backend=backend)
+                ok = jax.tree.all(jax.tree.map(
+                    lambda a, b: np.allclose(np.asarray(a), np.asarray(b),
+                                             rtol=1e-5, atol=1e-5,
+                                             equal_nan=True), ref, got))
+                if not bool(ok):
+                    failures.append((strat, name, backend))
+    assert not failures, failures
+    print('ALL_MATCH')
+""")
+
+
+@pytest.mark.slow
+def test_distributed_matches_local_all_algorithms():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ALL_MATCH" in proc.stdout

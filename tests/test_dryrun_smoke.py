@@ -1,0 +1,27 @@
+"""The dry-run harness itself, exercised in CI (smoke configs, subprocess
+with 512 forced host devices — the parent test process keeps 1 device)."""
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_single_and_multi():
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "llama3.2-1b", "--arch", "gat-cora",
+            "--arch", "bert4rec",
+            "--shape", "train_4k", "--shape", "molecule",
+            "--shape", "serve_p99",
+            "--mesh", "both", "--smoke", "--no-roofline",
+        ],
+        capture_output=True, text=True, timeout=1500,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    ok_lines = [ln for ln in proc.stdout.splitlines()
+                if ln.startswith("[ok")]
+    assert len(ok_lines) == 6, proc.stdout  # 3 cells x 2 meshes

@@ -1,0 +1,67 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash.ops import flash_attention
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.segsum.ops import segment_sum_mxu
+from repro.kernels.segsum.ref import segment_sum_ref
+
+
+@pytest.mark.parametrize("e,n,d", [
+    (256, 64, 32), (1000, 300, 64), (512, 128, 128), (77, 13, 8),
+    (2048, 17, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segsum_sweep(e, n, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(e + n))
+    msgs = jax.random.normal(k1, (e, d), dtype)
+    dst = jax.random.randint(k2, (e,), 0, n)
+    got = segment_sum_mxu(msgs, dst, n, block_n=64, block_e=128,
+                          interpret=True)
+    want = segment_sum_ref(msgs, dst, n)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol * 10,
+    )
+
+
+def test_segsum_empty_and_single_segment():
+    msgs = jnp.ones((128, 8), jnp.float32)
+    dst = jnp.zeros((128,), jnp.int32)
+    got = segment_sum_mxu(msgs, dst, 4, block_n=64, block_e=128,
+                          interpret=True)
+    np.testing.assert_allclose(got[0], 128.0)
+    np.testing.assert_allclose(got[1:], 0.0)
+
+
+@pytest.mark.parametrize("b,h,s,d", [
+    (2, 3, 256, 64), (1, 2, 128, 32), (2, 2, 384, 64), (1, 1, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(b, h, s, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(b * h + s), 3)
+    q = (jax.random.normal(k1, (b, h, s, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(k2, (b, h, s, d)) * 0.3).astype(dtype)
+    v = jax.random.normal(k3, (b, h, s, d)).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_unpadded_vs_padded_sequence():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (1, 2, 200, 32)) * 0.3
+    k = jax.random.normal(k2, (1, 2, 200, 32)) * 0.3
+    v = jax.random.normal(k3, (1, 2, 200, 32))
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

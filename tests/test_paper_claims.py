@@ -1,0 +1,85 @@
+"""Validation against the paper's own claims (EXPERIMENTS.md §Paper-claims).
+
+The paper reports scalability/flexibility results, not accuracy; the
+reproducible claims at CI scale are:
+
+  C1  (Fig 7 / Table I) clique expansion explodes for heavy-tailed
+      hypergraphs and stays moderate for apache-like ones.
+  C2  (Figs 8-11) no single partitioner dominates: the best strategy
+      differs across dataset regimes, tracking the V:E ratio.
+  C3  (§IV-B) greedy (holistic) partitioning cuts replication vs random.
+  C4  (Table II) the system core stays within the paper's MESH-vs-HyperX
+      LOC envelope (~5x smaller than a specialized build).
+  C5  message combining: sum-decomposed == Seq-combined results
+      (pre-aggregation is lossless) — covered in test_algorithms.py.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import clique_expansion_size
+from repro.data import make_dataset
+from repro.partition import STRATEGIES, partition
+
+
+def test_c1_clique_expansion_blowup():
+    apache = make_dataset("apache", scale=0.05, seed=0)
+    orkut = make_dataset("orkut", scale=0.0005, seed=0)
+    ratio_apache = clique_expansion_size(apache) / apache.nnz
+    ratio_orkut = clique_expansion_size(orkut) / orkut.nnz
+    # heavy-tailed cardinalities blow up quadratically; apache stays small
+    assert ratio_orkut > 3 * ratio_apache
+
+
+def test_c2_no_partitioner_dominates():
+    """Rank partitioners by projected sync bytes per regime; the argmin
+    must differ across regimes (the paper's flexibility argument)."""
+    winners = {}
+    for regime, scale in [("friendster", 0.0008), ("orkut", 0.0003),
+                          ("dblp", 0.002)]:
+        hg = make_dataset(regime, scale=scale, seed=0)
+        best, best_cost = None, np.inf
+        for strat in STRATEGIES:
+            kw = {"chunk": 256} if "greedy" in strat else {}
+            plan = partition(strat, hg, 8, **kw)
+            # paper's execution-time drivers: sync volume + load balance
+            cost = plan.stats.sync_bytes_per_dim * plan.stats.edge_balance
+            if cost < best_cost:
+                best, best_cost = strat, cost
+        winners[regime] = best
+    assert len(set(winners.values())) >= 2, winners
+
+
+def test_c3_greedy_beats_random_on_replication():
+    hg = make_dataset("dblp", scale=0.004, seed=1)
+    r = partition("random_vertex_cut", hg, 8)
+    g = partition("greedy_vertex_cut", hg, 8, chunk=256)
+    assert (
+        g.stats.vertex_replication < r.stats.vertex_replication
+    )
+
+
+def test_c4_loc_envelope():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def loc(path):
+        total = 0
+        for base, _, files in os.walk(os.path.join(root, path)):
+            for f in files:
+                if f.endswith(".py"):
+                    with open(os.path.join(base, f)) as fh:
+                        total += sum(
+                            1 for ln in fh
+                            if ln.strip() and not ln.strip().startswith("#")
+                        )
+        return total
+
+    core = loc("src/repro/core") + loc("src/repro/partition")
+    apps = loc("src/repro/algorithms")
+    # paper: MESH total system 795 LOC vs HyperX 4050. Our JAX port spends
+    # more lines (distributed executor is explicit, not inherited from
+    # GraphX) but must stay well under the specialized-system scale.
+    assert core < 4050, core
+    # applications stay tens-of-lines each (7 algorithms)
+    assert apps / 7 < 120, apps

@@ -1,0 +1,90 @@
+"""Partitioner invariants + properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HyperGraph
+from repro.data import powerlaw_hypergraph
+from repro.partition import STRATEGIES, partition
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def small_hypergraph(draw):
+    nv = draw(st.integers(4, 40))
+    ne = draw(st.integers(2, 30))
+    seed = draw(st.integers(0, 1000))
+    return powerlaw_hypergraph(nv, ne, mean_cardinality=3, seed=seed)
+
+
+@given(small_hypergraph(), st.sampled_from(sorted(STRATEGIES)),
+       st.sampled_from([2, 4, 8]))
+def test_plan_reconstructs_edge_list(hg, strategy, n_parts):
+    """Shards + masks must be a permutation of the incidence list —
+    no edge lost, none duplicated, padding properly dead."""
+    kw = {"chunk": 16} if "greedy" in strategy else {}
+    plan = partition(strategy, hg, n_parts, **kw)
+    live = plan.shard_mask > 0
+    pairs = set()
+    for p in range(n_parts):
+        for s, d in zip(plan.shard_src[p][live[p]],
+                        plan.shard_dst[p][live[p]]):
+            pairs.add((int(s), int(d)))
+    expect = set(
+        zip(np.asarray(hg.src).tolist(), np.asarray(hg.dst).tolist())
+    )
+    assert pairs == expect
+    assert int(live.sum()) == hg.nnz
+
+
+@given(small_hypergraph(), st.sampled_from([2, 8]))
+def test_vertex_cut_keeps_hyperedges_whole(hg, n_parts):
+    plan = partition("random_vertex_cut", hg, n_parts)
+    # every hyperedge's incidences in exactly one partition
+    assert plan.stats.hyperedge_replication == pytest.approx(1.0)
+
+
+@given(small_hypergraph(), st.sampled_from([2, 8]))
+def test_hyperedge_cut_keeps_vertices_whole(hg, n_parts):
+    plan = partition("random_hyperedge_cut", hg, n_parts)
+    assert plan.stats.vertex_replication == pytest.approx(1.0)
+
+
+def test_hybrid_cutoff_differentiates():
+    """Low-cardinality hyperedges stay whole; only heavy ones get cut."""
+    hg = powerlaw_hypergraph(200, 100, mean_cardinality=4,
+                             max_cardinality=150, seed=7)
+    plan = partition("hybrid_vertex_cut", hg, 8, cutoff=10)
+    card = np.bincount(np.asarray(hg.dst), minlength=hg.n_hyperedges)
+    dst = np.asarray(hg.dst)
+    for e in range(hg.n_hyperedges):
+        parts = set(plan.edge_part[dst == e].tolist())
+        if card[e] <= 10 and card[e] > 0:
+            assert len(parts) == 1, (e, card[e], parts)
+
+
+def test_greedy_reduces_replication_vs_random():
+    hg = powerlaw_hypergraph(500, 400, mean_cardinality=4, seed=11)
+    rnd = partition("random_vertex_cut", hg, 8)
+    greedy = partition("greedy_vertex_cut", hg, 8, chunk=1)
+    assert (
+        greedy.stats.vertex_replication
+        <= rnd.stats.vertex_replication + 1e-9
+    )
+    # greedy balances load explicitly
+    assert greedy.stats.edge_balance <= rnd.stats.edge_balance + 0.5
+
+
+def test_greedy_rejects_wide_meshes():
+    hg = powerlaw_hypergraph(30, 20, seed=0)
+    with pytest.raises(ValueError, match="bitmask"):
+        partition("greedy_vertex_cut", hg, 128)
+
+
+def test_partition_time_recorded():
+    hg = powerlaw_hypergraph(100, 80, seed=2)
+    plan = partition("random_both_cut", hg, 4)
+    assert plan.partition_time_s >= 0.0
+    assert plan.stats.pad_fraction < 0.9

@@ -1,0 +1,82 @@
+"""Neighbor sampler + clique expansion correctness."""
+import numpy as np
+import pytest
+
+from repro.core import HyperGraph, clique_expansion_size, to_graph
+from repro.data import powerlaw_hypergraph
+from repro.sparse import NeighborSampler, build_csr
+
+FIG1 = [[0, 1], [0, 1, 2, 3], [0, 3, 4], [2, 3]]
+
+
+def test_clique_expansion_fig1():
+    hg = HyperGraph.from_hyperedge_lists(FIG1, n_vertices=5)
+    g = to_graph(hg)
+    # unique unordered pairs of Fig 3(a): 8, symmetrized to 16
+    assert g.src.shape[0] == 16
+    assert clique_expansion_size(hg) == 8
+    pairs = set(zip(np.asarray(g.src).tolist(), np.asarray(g.dst).tolist()))
+    assert (0, 1) in pairs and (1, 0) in pairs
+    assert (1, 4) not in pairs  # v1 and v4 never share a hyperedge
+    # shared-count edge attr: v0-v1 share he0+he1 => weight 2
+    idx = [i for i, (a, b) in enumerate(
+        zip(np.asarray(g.src), np.asarray(g.dst))) if (a, b) == (0, 1)]
+    assert float(np.asarray(g.e_attr)[idx[0]]) == 2.0
+
+
+def test_clique_estimate_huge_regime_is_upper_bound_only():
+    hg = powerlaw_hypergraph(5000, 3000, mean_cardinality=12,
+                             max_cardinality=2000, seed=0)
+    est = clique_expansion_size(hg)
+    assert est > hg.nnz  # expansion blows up vs bipartite edges
+
+
+def _toy_graph():
+    #  0 <- 1, 0 <- 2, 1 <- 2, 3 isolated-in
+    src = np.array([1, 2, 2, 0], np.int32)
+    dst = np.array([0, 0, 1, 3], np.int32)
+    return build_csr(src, dst, 4)
+
+
+def test_csr_build():
+    indptr, indices = _toy_graph()
+    assert indptr.tolist() == [0, 2, 3, 3, 4]
+    assert sorted(indices[0:2].tolist()) == [1, 2]
+    assert indices[3] == 0
+
+
+def test_sampler_static_shapes_and_validity():
+    rng = np.random.default_rng(0)
+    n = 500
+    src = rng.integers(0, n, 4000).astype(np.int32)
+    dst = rng.integers(0, n, 4000).astype(np.int32)
+    indptr, indices = build_csr(src, dst, n)
+    sampler = NeighborSampler(indptr, indices, fanouts=(5, 3), seed=1)
+    n_nodes_max, n_edges_max = sampler.padded_block_shape(8)
+    for seed_batch in range(3):
+        seeds = rng.integers(0, n, 8).astype(np.int32)
+        block = sampler.sample_padded(seeds)
+        assert block.nodes.shape == (n_nodes_max + 1,)
+        assert block.edge_src.shape == (n_edges_max,)
+        # seeds occupy the first rows
+        assert set(block.nodes[: len(set(seeds.tolist()))]) <= set(
+            seeds.tolist()
+        )
+        live = block.edge_mask > 0
+        # every live edge is a real graph edge
+        edge_set = set(zip(src.tolist(), dst.tolist()))
+        for s_loc, d_loc in zip(block.edge_src[live],
+                                block.edge_dst[live]):
+            gs = int(block.nodes[s_loc])
+            gd = int(block.nodes[d_loc])
+            assert (gs, gd) in edge_set
+
+
+def test_sampler_zero_degree_masked():
+    # node 0 has no in-neighbors
+    src = np.array([0, 0], np.int32)
+    dst = np.array([1, 2], np.int32)
+    indptr, indices = build_csr(src, dst, 3)
+    sampler = NeighborSampler(indptr, indices, fanouts=(4,), seed=0)
+    block = sampler.sample_padded(np.array([0], np.int32))
+    assert float(block.edge_mask.sum()) == 0.0

@@ -1,0 +1,128 @@
+"""Property tests for the sparse substrate (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse import (
+    MONOIDS,
+    embedding_bag,
+    segment_mean,
+    segment_softmax,
+    segment_std,
+    segment_reduce,
+)
+from repro.sparse.embedding_bag import embedding_bag_dense
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def segmented_data(draw):
+    n_seg = draw(st.integers(1, 12))
+    n = draw(st.integers(1, 64))
+    ids = draw(
+        st.lists(st.integers(0, n_seg - 1), min_size=n, max_size=n)
+    )
+    vals = draw(
+        st.lists(
+            st.floats(-100, 100, allow_nan=False, width=32),
+            min_size=n, max_size=n,
+        )
+    )
+    return np.array(ids, np.int32), np.array(vals, np.float32), n_seg
+
+
+@given(segmented_data(), st.sampled_from(["sum", "max", "min", "prod"]))
+def test_segment_reduce_matches_fold(data, monoid_name):
+    """segment(x, ids)[i] == fold(combine, identity, values of segment i)
+    — the monoid law that makes pre-aggregation before the network legal."""
+    ids, vals, n_seg = data
+    monoid = MONOIDS[monoid_name]
+    got = np.asarray(
+        segment_reduce(jnp.asarray(vals), jnp.asarray(ids), n_seg,
+                       monoid_name)
+    )
+    for s in range(n_seg):
+        members = vals[ids == s]
+        ident = float(monoid.identity(np.float32))
+        expect = ident
+        for m in members:
+            expect = float(monoid.combine(jnp.float32(expect),
+                                          jnp.float32(m)))
+        if len(members) == 0 and monoid_name in ("max", "min"):
+            continue  # XLA empty-segment convention (±inf) — skip
+        np.testing.assert_allclose(got[s], expect, rtol=2e-5, atol=1e-4)
+
+
+@given(segmented_data())
+def test_segment_softmax_normalizes(data):
+    ids, vals, n_seg = data
+    p = np.asarray(
+        segment_softmax(jnp.asarray(vals), jnp.asarray(ids), n_seg)
+    )
+    sums = np.zeros(n_seg)
+    np.add.at(sums, ids, p)
+    present = np.unique(ids)
+    np.testing.assert_allclose(sums[present], 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+
+
+@given(segmented_data())
+def test_segment_mean_std(data):
+    ids, vals, n_seg = data
+    mean = np.asarray(segment_mean(jnp.asarray(vals), jnp.asarray(ids),
+                                   n_seg))
+    std = np.asarray(segment_std(jnp.asarray(vals), jnp.asarray(ids),
+                                 n_seg))
+    for s in np.unique(ids):
+        m = vals[ids == s]
+        np.testing.assert_allclose(mean[s], m.mean(), rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            std[s], np.sqrt(m.var() + 1e-5), rtol=2e-3, atol=1e-3
+        )
+
+
+@given(
+    st.integers(2, 20), st.integers(1, 8), st.integers(1, 30),
+    st.sampled_from(["sum", "mean", "max"]),
+)
+def test_embedding_bag_matches_loop(vocab, dim, nnz, mode):
+    rng = np.random.default_rng(0)
+    table = rng.standard_normal((vocab, dim)).astype(np.float32)
+    idx = rng.integers(0, vocab, nnz).astype(np.int32)
+    bags = np.sort(rng.integers(0, 4, nnz)).astype(np.int32)
+    got = np.asarray(
+        embedding_bag(jnp.asarray(table), jnp.asarray(idx),
+                      jnp.asarray(bags), 4, mode=mode)
+    )
+    for b in range(4):
+        rows = table[idx[bags == b]]
+        if len(rows) == 0:
+            np.testing.assert_allclose(got[b], 0.0, atol=1e-6)
+            continue
+        expect = {
+            "sum": rows.sum(0), "mean": rows.mean(0), "max": rows.max(0)
+        }[mode]
+        np.testing.assert_allclose(got[b], expect, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_dense_matches_ragged():
+    rng = np.random.default_rng(1)
+    table = rng.standard_normal((50, 8)).astype(np.float32)
+    idx = rng.integers(1, 50, (6, 5)).astype(np.int32)
+    idx[2, 3:] = 0  # PAD
+    dense = np.asarray(
+        embedding_bag_dense(jnp.asarray(table), jnp.asarray(idx),
+                            mode="sum", pad_id=0)
+    )
+    flat = idx.reshape(-1)
+    bags = np.repeat(np.arange(6), 5).astype(np.int32)
+    keep = flat != 0
+    ragged = np.asarray(
+        embedding_bag(jnp.asarray(table), jnp.asarray(flat[keep]),
+                      jnp.asarray(bags[keep]), 6, mode="sum")
+    )
+    np.testing.assert_allclose(dense, ragged, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,75 @@
+"""Render reports/dryrun_full.json into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1000:
+            return f"{b:.1f}{unit}"
+        b /= 1000
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(results) -> str:
+    lines = [
+        "| cell | mesh | status | compile s | args/dev | temp/dev | "
+        "collectives (static) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['cell']} | {r['mesh']} | skipped | — | — | — | "
+                f"{r['reason'][:48]} |"
+            )
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['cell']} | {r['mesh']} | FAILED | — | — | — | "
+                f"{r.get('error', '')[:60]} |"
+            )
+            continue
+        m = r["memory"]
+        cc = r["collective_counts"]
+        coll = " ".join(
+            f"{k.split('-')[1] if '-' in k else k}:{v}"
+            for k, v in cc.items() if v
+        )
+        lines.append(
+            f"| {r['cell']} | {r['mesh']} | ok | {r['compile_s']:.1f} | "
+            f"{m['argument_gb']:.2f}GB | {m['temp_gb']:.2f}GB | {coll} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(results) -> str:
+    lines = [
+        "| cell | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO | roofline frac | peak mem/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {r['cell']} | {rf['compute_s']:.2e} | "
+            f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+            f"**{rf['dominant']}** | {rf['useful_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.3f} | "
+            f"{rf['peak_mem_gb']:.1f}GB |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "reports/dryrun_full.json"
+    with open(path) as f:
+        results = json.load(f)
+    print("## Dry-run table\n")
+    print(dryrun_table(results))
+    print("\n## Roofline table (single-pod)\n")
+    print(roofline_table(results))
