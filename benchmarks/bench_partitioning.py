@@ -4,6 +4,10 @@ strategies across dataset regimes x four applications.
 The paper's headline result — no single partitioner dominates; the winner
 tracks the vertex:hyperedge ratio and skew — is asserted by
 tests/test_paper_claims.py over the stats this harness emits.
+
+Everything executes through the ``Engine`` facade; each partition row also
+reports which distributed backend the Engine's cost model would pick for
+that plan (``select_backend`` on the plan's projected sync volume).
 """
 from __future__ import annotations
 
@@ -11,9 +15,9 @@ from repro.algorithms import (
     label_propagation_spec,
     pagerank_entropy_spec,
     pagerank_spec,
-    run_local,
     shortest_paths_spec,
 )
+from repro.core import Engine, select_backend
 from repro.data import make_dataset
 from repro.partition import STRATEGIES, partition
 
@@ -34,22 +38,29 @@ REGIMES = {
 
 
 def run(n_parts: int = 8) -> None:
+    engine = Engine(backend="local")
     for regime, base_scale in REGIMES.items():
         hg = make_dataset(regime, scale=base_scale * SCALE, seed=0)
         for strat in STRATEGIES:
             kw = {"chunk": 256} if "greedy" in strat else {}
             plan = partition(strat, hg, n_parts, **kw)
             s = plan.stats
+            backend, _ = select_backend(
+                plan, hg.n_vertices, hg.n_hyperedges
+            )
             row(
                 f"partition/{regime}/{strat}/partition_time",
                 plan.partition_time_s * 1e6,
                 f"vrep={s.vertex_replication:.2f};"
                 f"herep={s.hyperedge_replication:.2f};"
                 f"bal={s.edge_balance:.2f};"
-                f"sync_bytes={s.sync_bytes_per_dim:.0f}",
+                f"sync_bytes={s.sync_bytes_per_dim:.0f};"
+                f"auto_backend={backend}",
             )
         for app, make_spec in APPS.items():
-            t, _ = timed(lambda: run_local(make_spec(hg)), repeats=2)
+            t, _ = timed(
+                lambda: engine.run(make_spec(hg)).value, repeats=2
+            )
             row(f"partition/{regime}/{app}/exec_time", t * 1e6,
                 f"nv={hg.n_vertices};ne={hg.n_hyperedges};nnz={hg.nnz}")
 

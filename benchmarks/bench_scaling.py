@@ -5,11 +5,17 @@ real speedup; what scales — and what we measure — is the *per-partition
 work* (edges/shard) and the projected sync volume, the quantities that
 govern Fig. 12-14 on real hardware.  Wall time is reported for reference.
 
+Each (regime, P) cell also reports the backend the Engine facade's cost
+model (``select_backend``) picks at that scale — the replicated->sharded
+crossover as P grows is the design-point flexibility the facade automates.
+
 The distributed executor itself runs under forced host devices in the
-separate dry-run/regression entry (tests/test_distributed.py).
+separate dry-run/regression entries (tests/test_distributed.py,
+tests/test_executor.py).
 """
 from __future__ import annotations
 
+from repro.core import select_backend
 from repro.data import make_dataset
 from repro.partition import partition
 
@@ -24,13 +30,17 @@ def run() -> None:
             plan = partition("random_both_cut", hg, n_parts)
             s = plan.stats
             per_shard = plan.shard_len
+            backend, _ = select_backend(
+                plan, hg.n_vertices, hg.n_hyperedges
+            )
             row(
                 f"scaling/{regime}/p{n_parts}/edges_per_shard",
                 float(per_shard),
                 f"vrep={s.vertex_replication:.2f};"
                 f"herep={s.hyperedge_replication:.2f};"
                 f"sync_bytes={s.sync_bytes_per_dim:.0f};"
-                f"pad={s.pad_fraction:.3f}",
+                f"pad={s.pad_fraction:.3f};"
+                f"auto_backend={backend}",
             )
 
 

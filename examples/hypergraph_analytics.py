@@ -1,7 +1,8 @@
 """End-to-end distributed hypergraph analytics — the paper's flagship
-scenario: generate an orkut-like hypergraph, evaluate every partitioning
-strategy, pick the best by projected sync volume, and run Label
-Propagation on the distributed engine over host devices.
+scenario: generate an orkut-like hypergraph and run Label Propagation
+distributed over host devices, letting the ``Engine`` facade pick the
+partitioning strategy (min projected sync volume) and the backend
+(replicated vs sharded by the sync cost model) automatically.
 
 Run: PYTHONPATH=src python examples/hypergraph_analytics.py
 (spawns 8 forced host devices; set REPRO_DEVICES to change)
@@ -18,35 +19,34 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
-from repro.algorithms import label_propagation_spec, run_distributed, \
-    run_local  # noqa: E402
+from repro.algorithms import label_propagation_spec  # noqa: E402
+from repro.core import Engine  # noqa: E402
 from repro.data import make_dataset  # noqa: E402
-from repro.partition import STRATEGIES, partition  # noqa: E402
 
 hg = make_dataset("orkut", scale=0.0005, seed=0)
 print(f"hypergraph: {hg.n_vertices} vertices, {hg.n_hyperedges} "
       f"hyperedges, {hg.nnz} incidences (orkut regime: E >> V)")
 
-plans = {}
-for strat in STRATEGIES:
-    kw = {"chunk": 256} if "greedy" in strat else {}
-    plans[strat] = partition(strat, hg, N_DEV, **kw)
-    s = plans[strat].stats
-    print(f"  {strat:22s} t={plans[strat].partition_time_s:6.2f}s "
-          f"vrep={s.vertex_replication:4.2f} "
-          f"herep={s.hyperedge_replication:4.2f} "
-          f"bal={s.edge_balance:4.2f} "
-          f"sync={s.sync_bytes_per_dim / 1e6:6.2f} MB/dim")
-
-best = min(plans, key=lambda k: plans[k].stats.sync_bytes_per_dim)
-print(f"\nselected strategy (min projected sync): {best}")
-
 mesh = Mesh(np.array(jax.devices()[:N_DEV]).reshape(N_DEV), ("data",))
 spec = label_propagation_spec(hg, iters=16)
-v_dist, he_dist = run_distributed(
-    spec, plans[best], mesh, backend="sharded"
-)
-v_local, he_local = run_local(spec)
+
+# One call: the Engine partitions with every registered strategy, keeps
+# the plan with minimum projected sync volume, sizes replicated-vs-sharded
+# with the same stats, and runs the superstep scan under shard_map.
+engine = Engine(mesh=mesh)  # everything else "auto"
+res = engine.run(spec)
+
+part_why = res.decision["partition"]
+print("\nstrategy sync bytes/dim (Engine's selection table):")
+for name, cost in sorted(part_why["sync_bytes_by_strategy"].items(),
+                         key=lambda kv: kv[1]):
+    marker = " <- selected" if name == res.partition else ""
+    print(f"  {name:22s} {cost / 1e6:8.3f} MB{marker}")
+print(f"\nselected design point: partition={res.partition} "
+      f"backend={res.backend} ({res.decision['backend']['reason']})")
+
+v_local, _ = Engine(backend="local").run(spec).value
+v_dist, _ = res.value
 match = bool(np.array_equal(np.asarray(v_dist), np.asarray(v_local)))
 print(f"distributed == local: {match}")
 print(f"communities found: {len(np.unique(np.asarray(v_dist)))}")

@@ -1,17 +1,24 @@
 """Quickstart: the MESH API on the paper's Fig. 1 hypergraph.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+
+One API, many design points: every built-in application is a thin wrapper
+over ``Engine.run(spec)``; construct your own ``Engine`` to pin or
+auto-select the representation / partitioning / backend design axes.
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HyperGraph, Program, ProcedureOut, compute
+from repro.core import Engine, HyperGraph, Program, ProcedureOut
 from repro.algorithms import (
+    AlgorithmSpec,
     connected_components,
     label_propagation,
     pagerank,
     pagerank_entropy,
+    pagerank_spec,
     shortest_paths,
+    vertex_pagerank_spec,
 )
 
 # The paper's Fig. 1: four groups over five users.
@@ -22,7 +29,7 @@ print("degrees      ", np.asarray(hg.degrees()))
 print("cardinalities", np.asarray(hg.cardinalities()))
 
 # Built-in applications (each a ~20-line Program pair; see
-# src/repro/algorithms/).
+# src/repro/algorithms/).  Wrappers construct a default local Engine.
 vr, her = pagerank(hg, iters=20)
 print("pagerank v   ", np.round(np.asarray(vr), 3))
 print("pagerank he  ", np.round(np.asarray(her), 3))
@@ -39,22 +46,38 @@ print("hops from v4 ", np.asarray(vd))
 vc, _ = connected_components(hg)
 print("components   ", np.asarray(vc))
 
-# A custom "think like a vertex or hyperedge" program: count 2-hop
-# neighbors through groups (vertex -> hyperedge -> vertex).
+# The Engine facade directly: the Result reports the design point chosen
+# and per-superstep activity when asked.
+engine = Engine()
+res = engine.run(pagerank_spec(hg, iters=20), collect_stats=True)
+print("engine ran   ", res.representation, "/", res.backend,
+      "| active trace:", np.asarray(res.superstep_stats[0])[:3], "...")
+
+# Representation auto-selection: the vertex-only PageRank spec satisfies
+# the clique precondition (no hyperedge state), and Fig. 1's expansion is
+# tiny, so "auto" constant-folds hyperedges away.
+res = engine.run(vertex_pagerank_spec(hg, iters=20))
+print("auto rep     ", res.representation, "->",
+      np.round(np.asarray(res.value), 3))
+
+# A custom "think like a vertex or hyperedge" program through the same
+# facade: count 2-hop neighbors through groups (vertex -> he -> vertex).
 def vertex(step, ids, attr, msg, deg):
     return ProcedureOut(attr=msg, msg=jnp.ones_like(attr))
 
 def hyperedge(step, ids, attr, msg, card):
     return ProcedureOut(attr=msg, msg=msg)
 
-out = compute(
-    hg.with_attrs(
+spec = AlgorithmSpec(
+    hg0=hg.with_attrs(
         v_attr=jnp.zeros((5,), jnp.float32),
         he_attr=jnp.zeros((4,), jnp.float32),
     ),
-    max_iters=2,  # 2nd vertex step consumes the hyperedge broadcast
     initial_msg=jnp.float32(0),
     v_program=Program(procedure=vertex, combiner="sum"),
     he_program=Program(procedure=hyperedge, combiner="sum"),
+    max_iters=2,  # 2nd vertex step consumes the hyperedge broadcast
+    extract=lambda out: out.v_attr,
+    name="two_hop_mass",
 )
-print("2-hop mass   ", np.asarray(out.v_attr))
+print("2-hop mass   ", np.asarray(engine.run(spec).value))

@@ -1,0 +1,105 @@
+"""A tiny, dependency-free stand-in for ``hypothesis``.
+
+The repo's property tests (``tests/test_partition.py``,
+``tests/test_segment_ops.py``, ``tests/test_executor.py``) are written
+against the real hypothesis API; when the package is installed it is used
+unchanged.  This shim exists so the tier-1 suite *runs* those properties —
+rather than skipping them — on minimal images where ``pip install`` is not
+available.  It covers exactly the API surface the tests use:
+
+* ``@given(*strategies)`` — deterministic seeded example loop
+  (seed = example index, so failures reproduce run-to-run),
+* ``settings`` / ``settings.register_profile`` / ``settings.load_profile``
+  with ``max_examples`` (``deadline`` accepted and ignored),
+* ``hypothesis.strategies``: ``integers``, ``floats``, ``lists``,
+  ``sampled_from``, ``booleans``, ``tuples``, ``composite``.
+
+No shrinking, no example database — a failing example is reported verbatim
+instead.  ``tests/conftest.py`` installs this under ``sys.modules
+["hypothesis"]`` only when the real package is missing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random as _random
+from typing import Any
+
+from repro._vendor.hypothesis_shim import strategies
+from repro._vendor.hypothesis_shim.strategies import SearchStrategy
+
+__all__ = ["given", "settings", "strategies", "SearchStrategy", "example"]
+
+IS_SHIM = True  # lets tests / tooling detect the fallback
+
+
+class settings:
+    """Profile-based example-count control (subset of hypothesis')."""
+
+    _profiles: dict[str, dict[str, Any]] = {"default": {"max_examples": 20}}
+    _current: dict[str, Any] = dict(_profiles["default"])
+
+    def __init__(self, parent: "settings | None" = None, **kwargs: Any):
+        self._kwargs = dict(kwargs)
+
+    def __call__(self, fn):
+        fn._shim_settings = self._kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs: Any) -> None:
+        cls._profiles[name] = dict(kwargs)
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = dict(cls._profiles["default"])
+        cls._current.update(cls._profiles.get(name, {}))
+
+
+def example(*args: Any, **kwargs: Any):
+    """Accepted for API compatibility; explicit examples are prepended."""
+
+    def deco(fn):
+        fn._shim_examples = getattr(fn, "_shim_examples", []) + [args]
+        return fn
+
+    return deco
+
+
+def given(*given_strategies: SearchStrategy):
+    if not given_strategies:
+        raise TypeError("given() requires at least one strategy")
+
+    def deco(fn):
+        n_params = len(given_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(*fixture_args: Any, **fixture_kwargs: Any):
+            cfg = dict(settings._current)
+            cfg.update(getattr(fn, "_shim_settings", {}))
+            max_examples = int(cfg.get("max_examples", 20))
+            for explicit in getattr(fn, "_shim_examples", []):
+                fn(*fixture_args, *explicit, **fixture_kwargs)
+            for i in range(max_examples):
+                rng = _random.Random(0xC0FFEE ^ (i * 7919))
+                drawn = [s.do_draw(rng) for s in given_strategies]
+                try:
+                    fn(*fixture_args, *drawn, **fixture_kwargs)
+                except Exception:
+                    print(
+                        f"Falsifying example (shim, #{i}): "
+                        f"{fn.__name__}{tuple(drawn)!r}"
+                    )
+                    raise
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution: the wrapper's visible signature keeps only the
+        # leading params NOT supplied by @given.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        kept = params[: max(0, len(params) - n_params)]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,117 @@
+"""Strategy combinators for the vendored hypothesis shim.
+
+Implements only what this repo's property tests use: ``integers``,
+``floats``, ``lists``, ``sampled_from``, ``booleans``, ``tuples`` and
+``composite``.  Every strategy is a thin wrapper around a draw function
+``random.Random -> value``; shrinking and the database are intentionally
+out of scope (the real hypothesis, when installed, takes precedence — see
+``tests/conftest.py``).
+"""
+from __future__ import annotations
+
+import random as _random
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    """A lazily-drawn value source (mirror of hypothesis' class name)."""
+
+    def __init__(self, draw_fn: Callable[[_random.Random], Any],
+                 label: str = "strategy"):
+        self._draw_fn = draw_fn
+        self._label = label
+
+    def do_draw(self, rng: _random.Random) -> Any:
+        return self._draw_fn(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: fn(self._draw_fn(rng)),
+                              f"{self._label}.map")
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<shim {self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng: _random.Random) -> int:
+        # Bias toward the boundaries occasionally — cheap edge coverage.
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        return rng.randint(lo, hi)
+
+    return SearchStrategy(draw, f"integers({lo},{hi})")
+
+
+def floats(
+    min_value: float,
+    max_value: float,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+    width: int = 64,
+) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng: _random.Random) -> float:
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        if r < 0.15:
+            return 0.0 if lo <= 0.0 <= hi else lo
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw, f"floats({lo},{hi})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(lambda rng: pool[rng.randrange(len(pool))],
+                          f"sampled_from(<{len(pool)}>)")
+
+
+def lists(
+    elements: SearchStrategy,
+    min_size: int = 0,
+    max_size: int | None = None,
+) -> SearchStrategy:
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng: _random.Random) -> list:
+        n = rng.randint(min_size, hi)
+        return [elements.do_draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw, f"lists({min_size},{hi})")
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.do_draw(rng) for s in strategies), "tuples"
+    )
+
+
+def composite(fn: Callable) -> Callable[..., SearchStrategy]:
+    """``@st.composite``: ``fn(draw, *args) -> value`` becomes a strategy
+    factory; ``draw`` resolves nested strategies against the same RNG."""
+
+    def builder(*args: Any, **kwargs: Any) -> SearchStrategy:
+        def draw_value(rng: _random.Random) -> Any:
+            def draw(strategy: SearchStrategy) -> Any:
+                return strategy.do_draw(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_value, f"composite:{fn.__name__}")
+
+    return builder

@@ -9,6 +9,7 @@ from repro.algorithms.pagerank import (
     pagerank_entropy_seq,
     pagerank_spec,
     pagerank_entropy_spec,
+    vertex_pagerank_spec,
 )
 from repro.algorithms.label_propagation import (
     label_propagation,
@@ -29,6 +30,7 @@ __all__ = [
     "pagerank_entropy_seq",
     "pagerank_spec",
     "pagerank_entropy_spec",
+    "vertex_pagerank_spec",
     "label_propagation",
     "label_propagation_spec",
     "shortest_paths",

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
-from repro.algorithms.spec import AlgorithmSpec, run_local
+from repro.algorithms.spec import AlgorithmSpec, resolve_engine
 
 
 def connected_components_spec(
@@ -40,10 +40,14 @@ def connected_components_spec(
         he_program=Program(procedure=hyperedge, combiner="min"),
         max_iters=max_iters,
         extract=lambda out: (out.v_attr, out.he_attr),
+        name="connected_components",
+        touches_hyperedge_state=True,  # per-hyperedge labels persist
     )
 
 
-def connected_components(hg, max_iters=128):
+def connected_components(hg, max_iters=128, *, engine=None):
     """Returns (vertex_component, hyperedge_component) int32 labels.
     The component id is the minimum member vertex id."""
-    return run_local(connected_components_spec(hg, max_iters))
+    return resolve_engine(engine).run(
+        connected_components_spec(hg, max_iters)
+    ).value

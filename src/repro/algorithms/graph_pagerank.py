@@ -2,7 +2,11 @@
 
 Only valid for algorithms with no hyperedge state — exactly the restriction
 the paper documents.  Weighted by shared-hyperedge count (the ``toGraph``
-edge attribute)."""
+edge attribute).
+
+This is the ``clique_program`` behind ``vertex_pagerank_spec``: the Engine
+facade routes here when ``representation`` resolves to ``clique`` (see
+``repro.core.executor.select_representation``)."""
 from __future__ import annotations
 
 import jax

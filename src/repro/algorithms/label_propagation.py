@@ -6,7 +6,7 @@ import jax.numpy as jnp
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
-from repro.algorithms.spec import AlgorithmSpec, run_local
+from repro.algorithms.spec import AlgorithmSpec, resolve_engine
 
 
 def label_propagation_spec(hg: HyperGraph, iters: int = 30) -> AlgorithmSpec:
@@ -30,9 +30,13 @@ def label_propagation_spec(hg: HyperGraph, iters: int = 30) -> AlgorithmSpec:
         he_program=Program(procedure=hyperedge, combiner="max"),
         max_iters=iters,
         extract=lambda out: (out.v_attr, out.he_attr),
+        name="label_propagation",
+        touches_hyperedge_state=True,  # labels persist on hyperedges
     )
 
 
-def label_propagation(hg, iters=30):
+def label_propagation(hg, iters=30, *, engine=None):
     """Returns (vertex_labels, hyperedge_labels) as int32."""
-    return run_local(label_propagation_spec(hg, iters))
+    return resolve_engine(engine).run(
+        label_propagation_spec(hg, iters)
+    ).value

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
-from repro.algorithms.spec import AlgorithmSpec, run_local
+from repro.algorithms.spec import AlgorithmSpec, resolve_engine
 
 
 def pagerank_spec(
@@ -57,12 +57,40 @@ def pagerank_spec(
         he_program=Program(procedure=hyperedge, combiner="sum"),
         max_iters=iters,
         extract=lambda out: (out.v_attr, out.he_attr),
+        name="pagerank",
+        touches_hyperedge_state=True,  # extracts hyperedge ranks
     )
 
 
-def pagerank(hg, iters=30, alpha=0.15, he_weight=None):
+def vertex_pagerank_spec(
+    hg: HyperGraph, iters: int = 30, alpha: float = 0.15
+) -> AlgorithmSpec:
+    """PageRank restricted to vertex ranks — the clique-eligible variant.
+
+    Drops the hyperedge-rank output, which makes the spec satisfy the
+    paper's constant-folding precondition (§IV-A1); the clique program is
+    the Fig. 7 baseline (``graph_pagerank`` weighted by shared-hyperedge
+    count).  Note the two representations are the paper's two *design
+    points*, not numerically identical algorithms.
+    """
+    from repro.algorithms.graph_pagerank import graph_pagerank
+
+    base = pagerank_spec(hg, iters, alpha)
+    return base._replace(
+        extract=lambda out: out.v_attr,
+        name="pagerank[vertex]",
+        touches_hyperedge_state=False,
+        clique_program=lambda g: graph_pagerank(
+            g, iters=iters, alpha=alpha
+        ),
+    )
+
+
+def pagerank(hg, iters=30, alpha=0.15, he_weight=None, *, engine=None):
     """Returns (vertex_ranks, hyperedge_ranks)."""
-    return run_local(pagerank_spec(hg, iters, alpha, he_weight))
+    return resolve_engine(engine).run(
+        pagerank_spec(hg, iters, alpha, he_weight)
+    ).value
 
 
 def pagerank_entropy_spec(
@@ -125,12 +153,17 @@ def pagerank_entropy_spec(
         extract=lambda out: (
             out.v_attr, out.he_attr[0], out.he_attr[2]
         ),
+        name="pagerank_entropy",
+        touches_hyperedge_state=True,
     )
 
 
-def pagerank_entropy(hg, iters=30, alpha=0.15, he_weight=None):
+def pagerank_entropy(hg, iters=30, alpha=0.15, he_weight=None, *,
+                     engine=None):
     """Returns (vertex_ranks, hyperedge_ranks, hyperedge_entropy)."""
-    return run_local(pagerank_entropy_spec(hg, iters, alpha, he_weight))
+    return resolve_engine(engine).run(
+        pagerank_entropy_spec(hg, iters, alpha, he_weight)
+    ).value
 
 
 def pagerank_entropy_seq(
@@ -179,7 +212,7 @@ def pagerank_entropy_seq(
             msg=(weight, new_rank / card),
         )
 
-    from repro.core.engine import compute
+    from repro.core.executor import Engine
 
     hg0 = hg.with_attrs(
         v_attr=jnp.ones((nv,), jnp.float32),
@@ -189,14 +222,19 @@ def pagerank_entropy_seq(
             jnp.zeros((ne,), jnp.float32),
         ),
     )
-    out = compute(
-        hg0,
-        max_iters=iters,
+    spec = AlgorithmSpec(
+        hg0=hg0,
         initial_msg=(jnp.float32(1.0), jnp.float32(1.0)),
         v_program=Program(
             procedure=vertex, combiner="sum", reducer=entropy_reducer
         ),
         he_program=Program(procedure=hyperedge, combiner="sum"),
+        max_iters=iters,
+        extract=lambda out: (
+            out.v_attr, out.he_attr[0], out.he_attr[2]
+        ),
+        name="pagerank_entropy[seq]",
+        touches_hyperedge_state=True,
     )
-    he_rank, _, he_ent = out.he_attr
-    return out.v_attr, he_rank, he_ent
+    # Seq reducers have no distributed decomposition: pin the backend.
+    return Engine(backend="local").run(spec).value

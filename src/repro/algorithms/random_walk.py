@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
-from repro.algorithms.spec import AlgorithmSpec, run_local
+from repro.algorithms.spec import AlgorithmSpec, resolve_engine
 
 
 def random_walk_spec(
@@ -54,9 +54,15 @@ def random_walk_spec(
         he_program=Program(procedure=hyperedge, combiner="sum"),
         max_iters=iters,
         extract=lambda out: out.v_attr,
+        name="random_walk",
+        # hyperedges only relay mass (attr never read across steps), but
+        # the cardinality normalization has no clique equivalent:
+        touches_hyperedge_state=True,
     )
 
 
-def random_walk(hg, seeds=None, iters=30, alpha=0.15):
+def random_walk(hg, seeds=None, iters=30, alpha=0.15, *, engine=None):
     """Returns the stationary visit distribution over vertices."""
-    return run_local(random_walk_spec(hg, seeds, iters, alpha))
+    return resolve_engine(engine).run(
+        random_walk_spec(hg, seeds, iters, alpha)
+    ).value

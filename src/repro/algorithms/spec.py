@@ -1,37 +1,75 @@
 """AlgorithmSpec: one definition, every engine.
 
-Each algorithm module builds a spec (initial state + programs); thin
-wrappers run it on the local engine, and ``run_distributed`` runs the same
-spec under shard_map per a PartitionPlan — the property tests assert the
-two agree, which is the system's core correctness invariant.
+Each algorithm module builds a spec (initial state + programs + design
+metadata); the ``Engine`` facade (``repro.core.executor``) consumes it on
+any representation/partition/backend design point.  The property tests
+assert every design point agrees — the system's core correctness
+invariant.
+
+``run_local`` / ``run_distributed`` are the pre-facade entry points, kept
+as deprecated shims: they delegate to ``Engine`` and will be removed once
+nothing imports them.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, NamedTuple
 
 from repro.core.api import Program
-from repro.core.engine import compute
 from repro.core.hypergraph import HyperGraph
 
 
 class AlgorithmSpec(NamedTuple):
+    """A runnable algorithm: state + programs + design-choice metadata.
+
+    The trailing metadata fields feed the Engine's auto-selection:
+
+    * ``name`` labels results / reports.
+    * ``touches_hyperedge_state``: True when the algorithm reads or
+      returns per-hyperedge state — the paper's precondition gate: clique
+      expansion (constant folding, §IV-A1) is only legal when False.
+    * ``clique_program``: optional equivalent computation over the
+      clique-expanded ``Graph`` (``repro.core.clique.to_graph``); required
+      for the clique representation to be selectable.
+    """
+
     hg0: HyperGraph
     initial_msg: Any
     v_program: Program
     he_program: Program
     max_iters: int
     extract: Callable[[HyperGraph], Any]
+    name: str = "custom"
+    touches_hyperedge_state: bool = True
+    clique_program: Callable[..., Any] | None = None
+
+
+def resolve_engine(engine=None):
+    """The algorithm wrappers' engine policy: caller-supplied engine, or
+    a fresh default (auto representation, local-unless-meshed backend).
+    One place to change if the wrappers' default design point moves."""
+    if engine is not None:
+        return engine
+    from repro.core.executor import Engine
+
+    return Engine()
 
 
 def run_local(spec: AlgorithmSpec):
-    out = compute(
-        spec.hg0,
-        max_iters=spec.max_iters,
-        initial_msg=spec.initial_msg,
-        v_program=spec.v_program,
-        he_program=spec.he_program,
+    """Deprecated: use ``Engine(backend='local').run(spec).value``."""
+    warnings.warn(
+        "run_local is deprecated; route through repro.core.Engine",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return spec.extract(out)
+    from repro.core.executor import Engine
+
+    # Pin the legacy design point exactly: bipartite + local compute
+    # (representation='auto' could pick clique for eligible specs, which
+    # is a *different* numerical result).
+    return Engine(representation="bipartite", backend="local").run(
+        spec
+    ).value
 
 
 def run_distributed(
@@ -42,17 +80,15 @@ def run_distributed(
     backend: str = "replicated",
     axis: str = "data",
 ):
-    from repro.core.distributed import distributed_compute
-
-    out = distributed_compute(
-        spec.hg0,
-        plan,
-        mesh,
-        max_iters=spec.max_iters,
-        initial_msg=spec.initial_msg,
-        v_program=spec.v_program,
-        he_program=spec.he_program,
-        axis=axis,
-        backend=backend,
+    """Deprecated: use ``Engine(plan=..., mesh=..., backend=...)``."""
+    warnings.warn(
+        "run_distributed is deprecated; route through repro.core.Engine",
+        DeprecationWarning,
+        stacklevel=2,
     )
-    return spec.extract(out)
+    from repro.core.executor import Engine
+
+    return Engine(
+        plan=plan, mesh=mesh, representation="bipartite",
+        backend=backend, axis=axis,
+    ).run(spec).value

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
-from repro.algorithms.spec import AlgorithmSpec, run_local
+from repro.algorithms.spec import AlgorithmSpec, resolve_engine
 
 INF = jnp.float32(jnp.inf)
 
@@ -46,9 +46,13 @@ def shortest_paths_spec(
         he_program=Program(procedure=hyperedge, combiner="min"),
         max_iters=max_iters,
         extract=lambda out: (out.v_attr, out.he_attr),
+        name="sssp",
+        touches_hyperedge_state=True,  # per-hyperedge distances persist
     )
 
 
-def shortest_paths(hg, source, max_iters=64):
+def shortest_paths(hg, source, max_iters=64, *, engine=None):
     """Returns (vertex_hops, hyperedge_hops); unreachable = +inf."""
-    return run_local(shortest_paths_spec(hg, source, max_iters))
+    return resolve_engine(engine).run(
+        shortest_paths_spec(hg, source, max_iters)
+    ).value

@@ -1,0 +1,29 @@
+"""Version-portability shims for jax APIs that moved between releases.
+
+``shard_map`` lives at ``jax.shard_map`` with a ``check_vma`` flag on
+current jax, and at ``jax.experimental.shard_map.shard_map`` with the
+older ``check_rep`` spelling on 0.4.x.  Everything in this repo goes
+through this wrapper so version skew is handled in exactly one place.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions.
+
+    ``check``: whether to enable replication/varying-manual-axes checking
+    (``check_vma`` on new jax, ``check_rep`` on 0.4.x).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check,
+    )

@@ -1,8 +1,44 @@
-"""MESH core: the paper's contribution as a composable JAX module."""
+"""MESH core: the paper's contribution as a composable JAX module.
+
+Module map — one API, many design points:
+
+* ``hypergraph``  — the ``HyperGraph`` structure (bipartite incidence
+  COO, pytree-registered so whole hypergraphs flow through jit /
+  shard_map / scan).
+* ``api``         — the programming model: ``Program`` / ``ProcedureOut``
+  ("think like a vertex *or hyperedge*", Listing 1), message combiners.
+* ``engine``      — the single-device superstep executor (``compute``):
+  alternating vertex/hyperedge supersteps inside one ``lax.scan``.
+* ``distributed`` — the same supersteps under ``jax.shard_map``:
+  ``replicated`` (full-state psum) and ``sharded`` (all_gather +
+  psum_scatter over id-range blocks) backends, fed by a
+  ``PartitionPlan``.
+* ``clique``      — the clique-expansion representation (``to_graph``,
+  the paper's constant-folding optimization) and its feasibility
+  estimator ``clique_expansion_size``.
+* ``executor``    — the ``Engine`` facade: the ONE entry point. Takes an
+  ``AlgorithmSpec`` plus an ``ExecutionConfig`` naming every design
+  choice (representation / partition strategy / backend / jit /
+  max-iters), resolves ``"auto"`` fields with small cost models
+  (``select_representation``, ``select_backend``, ``select_partition``)
+  and reports the chosen design point on the returned ``Result``.
+
+Callers should construct an ``Engine`` (or use the algorithm wrappers'
+``engine=`` parameter); ``compute`` / ``distributed_compute`` remain
+importable as the low-level executors the facade drives.
+"""
 from repro.core.hypergraph import HyperGraph
 from repro.core.api import Program, ProcedureOut, constant_initial_msg
 from repro.core.engine import compute, deliver, superstep_pair
 from repro.core.clique import Graph, to_graph, clique_expansion_size
+from repro.core.executor import (
+    Engine,
+    ExecutionConfig,
+    Result,
+    select_backend,
+    select_partition,
+    select_representation,
+)
 
 __all__ = [
     "HyperGraph",
@@ -15,4 +51,10 @@ __all__ = [
     "Graph",
     "to_graph",
     "clique_expansion_size",
+    "Engine",
+    "ExecutionConfig",
+    "Result",
+    "select_backend",
+    "select_partition",
+    "select_representation",
 ]

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map as _shard_map
 from repro.core.api import Program, constant_initial_msg
 from repro.core.engine import _as_out
 from repro.core.hypergraph import HyperGraph
@@ -353,7 +354,9 @@ def distributed_compute(
         )
         return v_a, he_a
 
-    mapped = jax.shard_map(
+    # replication checking off: the halt flag is partition-uniform by
+    # construction, which 0.4.x check_rep cannot prove.
+    mapped = _shard_map(
         run,
         mesh=mesh,
         in_specs=(
@@ -361,7 +364,6 @@ def distributed_compute(
             edge_spec, edge_spec, edge_spec,
         ),
         out_specs=(state_spec, state_spec),
-        check_vma=False,
     )
     with mesh:
         v_out, he_out = jax.jit(mapped)(

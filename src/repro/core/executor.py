@@ -1,0 +1,509 @@
+"""One API, many design points: the ``Engine`` facade.
+
+MESH's central claim (§IV) is that representation and partitioning are
+*pluggable design choices behind one simple API*, selected per data and
+application characteristics.  This module is that API: every algorithm,
+benchmark, example and launch script routes through ``Engine.run``; the
+representation (bipartite incidence vs clique expansion), partitioning
+strategy and execution backend (local / replicated / sharded) are named by
+an ``ExecutionConfig`` and — when left ``"auto"`` — chosen by small cost
+models over the machinery the repo already has:
+
+* clique vs bipartite: ``clique_expansion_size`` against the incidence
+  count, gated on the paper's constant-folding precondition (the algorithm
+  must never touch hyperedge state — ``AlgorithmSpec.touches_hyperedge_state``);
+* replicated vs sharded: ``PartitionStats.sync_bytes_per_dim`` against the
+  full-replication sync bound the replicated backend pays by construction;
+* partition strategy: min projected sync volume across the strategy
+  registry (the selection loop of ``examples/hypergraph_analytics``).
+
+The chosen design point is reported on the returned ``Result`` so callers
+(and tests) can see *why* an execution ran the way it did.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.clique import clique_expansion_size, to_graph
+from repro.core.engine import compute, compute_jit
+from repro.core.hypergraph import HyperGraph
+
+REPRESENTATIONS = ("auto", "bipartite", "clique")
+BACKENDS = ("auto", "local", "replicated", "sharded")
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionConfig:
+    """Every design choice from the paper, in one place.
+
+    ``"auto"`` fields are resolved per spec/plan/mesh by ``Engine.run``;
+    the resolved copy (no ``"auto"`` left) is returned on ``Result.config``.
+
+    Attributes:
+      representation: ``bipartite`` | ``clique`` | ``auto``.  Clique
+        expansion is only legal for specs with
+        ``touches_hyperedge_state=False`` (paper §IV-A1) and a
+        ``clique_program``.
+      backend: ``local`` | ``replicated`` | ``sharded`` | ``auto``.
+        Distributed backends need a mesh; ``auto`` with no mesh = local.
+      partition_strategy: a name from ``repro.partition.STRATEGIES`` or
+        ``auto`` (min projected sync volume).  Ignored when an explicit
+        plan is passed to ``Engine``.  Resolved configs may carry
+        ``"none"``: the execution partitioned nothing (local / clique).
+      n_parts: partition count; defaults to ``mesh.shape[axis]``.
+      axis: mesh axis carrying edge partitions.
+      jit: wrap the local engine in ``jax.jit`` (distributed path is
+        always jitted by construction).
+      max_iters: overrides ``spec.max_iters`` when set.
+      collect_stats: return per-superstep activity counters (local
+        backend only — the distributed scan does not surface them yet).
+      clique_edge_budget: clique expansion is auto-picked only when its
+        (symmetrized) edge count is within this factor of the bipartite
+        incidence count — the build cost and memory are the paper's
+        Table I infeasibility argument.
+      replicated_bias: sharded wins when the plan's projected sync bytes
+        are below ``bias`` x the full-replication sync bound; the bias
+        captures replicated's lower constant factor (one fused psum vs
+        all_gather + psum_scatter).
+    """
+
+    representation: str = "auto"
+    backend: str = "auto"
+    partition_strategy: str = "auto"
+    n_parts: int | None = None
+    axis: str = "data"
+    jit: bool = False
+    max_iters: int | None = None
+    collect_stats: bool = False
+    clique_edge_budget: float = 4.0
+    replicated_bias: float = 0.5
+
+    def __post_init__(self):
+        if self.representation not in REPRESENTATIONS:
+            raise ValueError(
+                f"representation must be one of {REPRESENTATIONS}, "
+                f"got {self.representation!r}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """What an execution produced, plus the design point that produced it.
+
+    Attributes:
+      value: the spec's extracted output (same value the legacy
+        ``run_local`` / ``run_distributed`` returned).
+      config: the fully-resolved ``ExecutionConfig`` (no ``"auto"``).
+      representation / backend: the chosen design point (convenience
+        mirrors of ``config``).
+      partition: name of the partition strategy used, or ``None`` (local /
+        clique executions don't partition).
+      partition_stats: the plan's ``PartitionStats``, or ``None``.
+      superstep_stats: ``(v_active, he_active)`` int32 arrays of length
+        ``max_iters`` when ``collect_stats`` was set (local backend),
+        else ``None``.
+      decision: cost-model numbers behind each ``auto`` choice —
+        a dict of dicts, one entry per resolved axis.
+    """
+
+    value: Any
+    config: ExecutionConfig
+    representation: str
+    backend: str
+    partition: str | None = None
+    partition_stats: Any = None
+    superstep_stats: Any = None
+    decision: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def select_representation(
+    spec, hg: HyperGraph, *, edge_budget: float = 4.0
+) -> tuple[str, dict]:
+    """Clique vs bipartite for one spec — the paper's constant-folding
+    rule plus a size cost model.
+
+    Clique expansion is chosen only when (a) the algorithm never touches
+    hyperedge state and ships a ``clique_program`` (correctness
+    precondition, §IV-A1) and (b) the symmetrized expansion stays within
+    ``edge_budget`` x the bipartite incidence count (Table I: heavy-tailed
+    cardinalities blow the expansion up quadratically).
+    """
+    touches = getattr(spec, "touches_hyperedge_state", True)
+    has_program = getattr(spec, "clique_program", None) is not None
+    why: dict[str, Any] = {
+        "touches_hyperedge_state": touches,
+        "has_clique_program": has_program,
+    }
+    if touches or not has_program:
+        why["reason"] = (
+            "algorithm touches hyperedge state"
+            if touches
+            else "no clique program supplied"
+        )
+        return "bipartite", why
+
+    n_clique_edges = 2 * clique_expansion_size(hg)  # symmetrized
+    budget = edge_budget * max(hg.nnz, 1)
+    why.update(
+        clique_edges=int(n_clique_edges),
+        bipartite_edges=int(hg.nnz),
+        edge_budget=float(budget),
+    )
+    if n_clique_edges <= budget:
+        why["reason"] = "expansion within edge budget"
+        return "clique", why
+    why["reason"] = "expansion exceeds edge budget"
+    return "bipartite", why
+
+
+def select_backend(
+    plan,
+    n_vertices: int,
+    n_hyperedges: int,
+    *,
+    replicated_bias: float = 0.5,
+) -> tuple[str, dict]:
+    """Replicated vs sharded for one partition plan.
+
+    The replicated backend syncs a *full-size* state buffer across every
+    partition each half-superstep — equivalent to refreshing ``P - 1``
+    replicas of every entity: ``full_sync = 2 * 4 * (P - 1) * (|V|+|E|)``
+    bytes per float32 state dim.  The sharded backend's traffic tracks the
+    replicas the edge cut actually created, which is exactly
+    ``PartitionStats.sync_bytes_per_dim``.  Sharded wins when its
+    projected sync is below ``replicated_bias`` x the full bound; the
+    bias (< 1) favors replicated for well-connected small states where
+    its single fused collective is cheaper in practice (the paper's
+    apache/dblp regime).
+    """
+    stats = plan.stats
+    p = plan.n_parts
+    full_sync = 2.0 * 4.0 * max(p - 1, 0) * (n_vertices + n_hyperedges)
+    sharded_sync = float(stats.sync_bytes_per_dim)
+    why = {
+        "n_parts": p,
+        "sync_bytes_per_dim": sharded_sync,
+        "full_replication_sync_bytes": full_sync,
+        "replicated_bias": replicated_bias,
+    }
+    if p <= 1:
+        why["reason"] = "single partition: replication is free"
+        return "replicated", why
+    if sharded_sync < replicated_bias * full_sync:
+        why["reason"] = "plan sync volume beats full replication"
+        return "sharded", why
+    why["reason"] = "cut replicates most entities anyway"
+    return "replicated", why
+
+
+def select_partition(
+    hg: HyperGraph, n_parts: int, strategy: str = "auto"
+) -> tuple[Any, dict]:
+    """Build a plan; ``auto`` = min projected sync volume over the
+    strategy registry (greedy strategies run in chunked/approximate mode
+    so selection stays preprocessing-cheap)."""
+    from repro.partition import STRATEGIES, partition
+
+    if strategy != "auto":
+        if strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown partition strategy {strategy!r}; pick one of "
+                f"{sorted(STRATEGIES)} or 'auto'"
+            )
+        kw = {"chunk": 256} if "greedy" in strategy else {}
+        return partition(strategy, hg, n_parts, **kw), {
+            "strategy": strategy, "reason": "explicitly configured",
+        }
+
+    best_name, best_plan = None, None
+    costs = {}
+    for name in sorted(STRATEGIES):
+        kw = {"chunk": 256} if "greedy" in name else {}
+        try:
+            plan = partition(name, hg, n_parts, **kw)
+        except ValueError:
+            continue  # e.g. greedy bitmask width on wide meshes
+        costs[name] = plan.stats.sync_bytes_per_dim
+        if best_plan is None or (
+            plan.stats.sync_bytes_per_dim
+            < best_plan.stats.sync_bytes_per_dim
+        ):
+            best_name, best_plan = name, plan
+    if best_plan is None:
+        raise RuntimeError("no partition strategy produced a plan")
+    return best_plan, {
+        "strategy": best_name,
+        "reason": "min projected sync volume",
+        "sync_bytes_by_strategy": costs,
+    }
+
+
+class Engine:
+    """The single entry point for hypergraph execution.
+
+    >>> eng = Engine()                     # local, auto representation
+    >>> res = eng.run(pagerank_spec(hg))
+    >>> res.value, res.backend, res.decision
+
+    >>> eng = Engine(mesh=mesh, backend="auto")   # distributed, plan auto
+    >>> res = eng.run(label_propagation_spec(hg))
+
+    An ``Engine`` is cheap to construct and stateless apart from its
+    config / plan / mesh; algorithms' thin wrappers accept ``engine=`` so
+    callers opt any call site into any design point without new APIs.
+    """
+
+    def __init__(
+        self,
+        plan=None,
+        mesh=None,
+        config: ExecutionConfig | None = None,
+        **overrides: Any,
+    ):
+        cfg = config if config is not None else ExecutionConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        self.plan = plan
+        self.mesh = mesh
+        self.config = cfg
+        # Auto-built plans, keyed by hypergraph identity: repeated
+        # run()/resolve() on the same hypergraph must not re-run the
+        # full strategy sweep.  [(hg, n_parts, strategy, plan, why)]
+        self._plan_cache: list = []
+
+    # -- resolution ---------------------------------------------------------
+
+    def _resolve_representation(self, spec, cfg) -> tuple[str, dict]:
+        if cfg.representation == "bipartite":
+            return "bipartite", {"reason": "explicitly configured"}
+        touches = getattr(spec, "touches_hyperedge_state", True)
+        has_program = getattr(spec, "clique_program", None) is not None
+        if cfg.representation == "clique":
+            if touches:
+                raise ValueError(
+                    "representation='clique' is invalid for "
+                    f"{getattr(spec, 'name', 'this spec')!r}: clique "
+                    "expansion is only legal for algorithms that never "
+                    "touch hyperedge state (MESH §IV-A1)"
+                )
+            if not has_program:
+                raise ValueError(
+                    "representation='clique' needs a clique_program on "
+                    "the AlgorithmSpec"
+                )
+            if cfg.backend in ("replicated", "sharded"):
+                raise ValueError(
+                    "representation='clique' executes locally and cannot "
+                    f"honor backend={cfg.backend!r}"
+                )
+            if cfg.max_iters is not None:
+                raise ValueError(
+                    "max_iters cannot override a clique_program (its "
+                    "iteration count is baked into the spec); rebuild "
+                    "the spec with the desired iters instead"
+                )
+            if self.mesh is not None:
+                raise ValueError(
+                    "representation='clique' executes locally and "
+                    "cannot use the supplied mesh; drop the mesh or "
+                    "use representation='bipartite'"
+                )
+            return "clique", {"reason": "explicitly configured"}
+        # auto: explicit requests the clique path cannot honor pin
+        # bipartite rather than being silently dropped.
+        if cfg.backend in ("replicated", "sharded"):
+            return "bipartite", {
+                "reason": "distributed backend requested; clique "
+                "executes locally"
+            }
+        if self.mesh is not None:
+            return "bipartite", {
+                "reason": "mesh supplied (distributed intent); clique "
+                "executes locally"
+            }
+        if cfg.max_iters is not None and has_program and not touches:
+            return "bipartite", {
+                "reason": "max_iters override cannot apply to a "
+                "clique_program"
+            }
+        return select_representation(
+            spec, spec.hg0, edge_budget=cfg.clique_edge_budget
+        )
+
+    def _resolve_backend(self, spec, cfg) -> tuple[str, Any, dict, dict]:
+        """Returns (backend, plan_or_None, backend_why, partition_why)."""
+        if cfg.backend == "local":
+            return "local", None, {"reason": "explicitly configured"}, {}
+
+        if self.mesh is None:
+            if cfg.backend in ("replicated", "sharded"):
+                raise ValueError(
+                    f"backend={cfg.backend!r} needs a mesh; construct "
+                    "Engine(mesh=...) or use backend='local'"
+                )
+            return "local", None, {"reason": "no mesh available"}, {}
+
+        n_parts = cfg.n_parts or int(self.mesh.shape[cfg.axis])
+        plan = self.plan
+        part_why: dict[str, Any] = {}
+        if plan is None:
+            plan, part_why = self._cached_plan(
+                spec.hg0, n_parts, cfg.partition_strategy
+            )
+        else:
+            part_why = {"strategy": plan.name,
+                        "reason": "plan supplied by caller"}
+        if plan.n_parts != n_parts:
+            raise ValueError(
+                f"plan has {plan.n_parts} partitions but mesh"
+                f"[{cfg.axis!r}] = {n_parts}"
+            )
+        if cfg.backend in ("replicated", "sharded"):
+            return (
+                cfg.backend, plan,
+                {"reason": "explicitly configured"}, part_why,
+            )
+        backend, why = select_backend(
+            plan,
+            spec.hg0.n_vertices,
+            spec.hg0.n_hyperedges,
+            replicated_bias=cfg.replicated_bias,
+        )
+        return backend, plan, why, part_why
+
+    def _cached_plan(self, hg, n_parts: int, strategy: str):
+        for c_hg, c_parts, c_strat, c_plan, c_why in self._plan_cache:
+            if c_hg is hg and c_parts == n_parts and c_strat == strategy:
+                return c_plan, c_why
+        plan, why = select_partition(hg, n_parts, strategy)
+        self._plan_cache.append((hg, n_parts, strategy, plan, why))
+        del self._plan_cache[:-4]  # bound the strong refs we hold
+        return plan, why
+
+    # -- execution ----------------------------------------------------------
+
+    def resolve(
+        self, spec, **overrides: Any
+    ) -> tuple[ExecutionConfig, Any, dict]:
+        """Resolve every ``"auto"`` field for ``spec`` WITHOUT executing.
+
+        Returns ``(resolved_config, plan_or_None, decision)`` — the exact
+        design point ``run`` would execute, for dry-run inspection and
+        cheap decision tests (no compilation happens here; partition
+        construction does run when a plan must be built).
+        """
+        cfg = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        decision: dict[str, Any] = {}
+        representation, rep_why = self._resolve_representation(spec, cfg)
+        decision["representation"] = rep_why
+        max_iters = (
+            cfg.max_iters if cfg.max_iters is not None else spec.max_iters
+        )
+        if representation == "clique":
+            decision["backend"] = {
+                "reason": "clique representation executes locally"
+            }
+            resolved = dataclasses.replace(
+                cfg,
+                representation="clique",
+                backend="local",
+                max_iters=max_iters,
+                partition_strategy="none",
+            )
+            return resolved, None, decision
+
+        backend, plan, backend_why, part_why = self._resolve_backend(
+            spec, cfg
+        )
+        decision["backend"] = backend_why
+        if part_why:
+            decision["partition"] = part_why
+        resolved = dataclasses.replace(
+            cfg,
+            representation="bipartite",
+            backend=backend,
+            max_iters=max_iters,
+            # "none" = this execution partitions nothing (local path);
+            # a plan pins its strategy name.
+            partition_strategy=(
+                plan.name if plan is not None else "none"
+            ),
+            n_parts=plan.n_parts if plan is not None else cfg.n_parts,
+        )
+        return resolved, plan, decision
+
+    def run(self, spec, **overrides: Any) -> Result:
+        """Execute an ``AlgorithmSpec`` at the configured design point.
+
+        ``overrides`` are per-call ``ExecutionConfig`` replacements
+        (e.g. ``engine.run(spec, max_iters=8)``).
+        """
+        resolved, plan, decision = self.resolve(spec, **overrides)
+
+        if resolved.representation == "clique":
+            graph = to_graph(spec.hg0)
+            return Result(
+                value=spec.clique_program(graph),
+                config=resolved,
+                representation="clique",
+                backend="local",
+                decision=decision,
+            )
+
+        if resolved.backend == "local":
+            fn = compute_jit if resolved.jit else compute
+            out = fn(
+                spec.hg0,
+                max_iters=resolved.max_iters,
+                initial_msg=spec.initial_msg,
+                v_program=spec.v_program,
+                he_program=spec.he_program,
+                return_stats=resolved.collect_stats,
+            )
+            stats = None
+            if resolved.collect_stats:
+                out, stats = out
+            return Result(
+                value=spec.extract(out),
+                config=resolved,
+                representation="bipartite",
+                backend="local",
+                superstep_stats=stats,
+                decision=decision,
+            )
+
+        from repro.core.distributed import distributed_compute
+
+        out = distributed_compute(
+            spec.hg0,
+            plan,
+            self.mesh,
+            max_iters=resolved.max_iters,
+            initial_msg=spec.initial_msg,
+            v_program=spec.v_program,
+            he_program=spec.he_program,
+            axis=resolved.axis,
+            backend=resolved.backend,
+        )
+        return Result(
+            value=spec.extract(out),
+            config=resolved,
+            representation="bipartite",
+            backend=resolved.backend,
+            partition=plan.name,
+            partition_stats=plan.stats,
+            decision=decision,
+        )

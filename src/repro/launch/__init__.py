@@ -1,4 +1,9 @@
-"""Launch layer: meshes, task builders, dry-run, trainers, serving."""
+"""Launch layer: meshes, task builders, dry-run, trainers, serving.
+
+Hypergraph analytics launches through ``repro.launch.hypergraph`` (the
+Engine-facade CLI); LM/GNN training and serving through ``train`` /
+``serve`` / ``dryrun``.
+"""
 from repro.launch.mesh import (
     dp_axes,
     flat_axes,

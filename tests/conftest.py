@@ -1,4 +1,20 @@
-import pytest
+import os
+import sys
+
+# Property tests are written against the real ``hypothesis`` API.  When the
+# package is missing (minimal images without network access) fall back to
+# the vendored shim so the properties still *run* instead of erroring at
+# collection.  Must happen before test modules import, hence conftest.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    _src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    if _src not in sys.path:
+        sys.path.insert(0, _src)
+    from repro._vendor import hypothesis_shim
+
+    sys.modules["hypothesis"] = hypothesis_shim
+    sys.modules["hypothesis.strategies"] = hypothesis_shim.strategies
 
 
 def pytest_configure(config):

@@ -1,5 +1,6 @@
 """Distributed == local engine equality, executed in a subprocess with
 forced host devices (the parent test process must keep 1 device)."""
+import os
 import subprocess
 import sys
 import textwrap
@@ -49,10 +50,12 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_distributed_matches_local_all_algorithms():
+    # Inherit the environment: dropping JAX_PLATFORMS makes jax probe for
+    # accelerator platforms, stalling the child for minutes.
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        env={**os.environ, "PYTHONPATH": "src"},
         cwd=__file__.rsplit("/tests/", 1)[0],
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

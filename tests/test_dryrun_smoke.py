@@ -1,5 +1,6 @@
 """The dry-run harness itself, exercised in CI (smoke configs, subprocess
 with 512 forced host devices — the parent test process keeps 1 device)."""
+import os
 import subprocess
 import sys
 
@@ -18,7 +19,9 @@ def test_dryrun_smoke_single_and_multi():
             "--mesh", "both", "--smoke", "--no-roofline",
         ],
         capture_output=True, text=True, timeout=1500,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # Inherit the environment (JAX_PLATFORMS in particular: without
+        # it jax probes for accelerator platforms and stalls for minutes).
+        env={**os.environ, "PYTHONPATH": "src"},
         cwd=__file__.rsplit("/tests/", 1)[0],
     )
     assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]

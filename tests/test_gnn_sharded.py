@@ -5,6 +5,7 @@ are taken THROUGH shard_map, so param updates must match the unsharded
 step bit-for-bit (sum-aggregation models; PNA's min/max aggregators hit a
 known JAX shard_map-linearization limitation and stay on the pjit path).
 """
+import os
 import subprocess
 import sys
 import textwrap
@@ -58,7 +59,9 @@ def test_edge_sharded_gnn_matches_plain():
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
         capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # Inherit the environment (JAX_PLATFORMS in particular: without
+        # it jax probes for accelerator platforms and stalls for minutes).
+        env={**os.environ, "PYTHONPATH": "src"},
         cwd=__file__.rsplit("/tests/", 1)[0],
     )
     assert proc.returncode == 0, proc.stderr[-3000:]

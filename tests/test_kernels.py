@@ -23,9 +23,13 @@ def test_segsum_sweep(e, n, d, dtype):
                           interpret=True)
     want = segment_sum_ref(msgs, dst, n)
     tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    # bf16 rounding error grows with per-segment accumulation depth
+    # (~e/n addends); near-zero sums of ~120 N(0,1) values cancel
+    # catastrophically, so the floor must scale with sqrt(depth).
+    atol = tol * 10 * max(1.0, (e / n) ** 0.5 / 3.0)
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
-        rtol=tol, atol=tol * 10,
+        rtol=tol, atol=atol,
     )
 
 

@@ -1,5 +1,9 @@
 """Per-arch LM smoke tests (reduced configs): one forward/train step on
-CPU asserting output shapes + no NaNs; prefill/decode agreement."""
+CPU asserting output shapes + no NaNs; prefill/decode agreement.
+
+Marked slow: the per-arch compiles push the suite past the tier-1 wall
+clock; run with ``-m slow`` (or ``-m ""`` for everything).
+"""
 import dataclasses
 
 import jax
@@ -17,6 +21,8 @@ from repro.models.transformer import (
     serve_step,
 )
 from repro.train import AdamWConfig, init_train_state, make_train_step
+
+pytestmark = pytest.mark.slow
 
 LM_ARCHS = [a for a in ARCH_IDS
             if get_config(a, smoke=True).family == "lm"]
