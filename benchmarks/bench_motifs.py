@@ -1,0 +1,117 @@
+"""Batch analytics under the Engine: intersection kernels + h-motif census.
+
+Measures, per dataset regime:
+
+* pair-intersections/sec for BOTH kernel paths (bitset word lanes vs
+  sorted-merge ``searchsorted``) over the same overlapping-pair batch —
+  the quantity the ``select_intersect_kernel`` cost model trades off;
+* exact census wall-time through ``Engine.analyze`` (``mode="exact"``),
+  and the sampled estimator's wall-time + relative error against it;
+* which kernel ``intersect_kernel="auto"`` picks — asserted to flip
+  between the small-vocab and large-vocab inputs (the acceptance check
+  of the motif subsystem).
+
+Emits CSV rows to stdout plus a ``BENCH_motifs.json`` artifact (the
+nightly CI job uploads these).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AnalyticsSpec, Engine
+from repro.data import make_dataset, powerlaw_hypergraph
+from repro.motifs import (
+    batch_intersections,
+    build_index,
+    overlap_pairs,
+    select_intersect_kernel,
+)
+
+from benchmarks.common import SCALE, emit_json, row, timed
+
+
+def bench_kernels(name: str, hg, results: dict) -> None:
+    pairs = overlap_pairs(hg)
+    ea, eb = pairs[:, 0].astype(np.int32), pairs[:, 1].astype(np.int32)
+    auto_pick, why = select_intersect_kernel(hg)
+    entry = results.setdefault(name, {
+        "n_vertices": hg.n_vertices,
+        "n_hyperedges": hg.n_hyperedges,
+        "nnz": hg.nnz,
+        "n_overlap_pairs": int(len(pairs)),
+        "auto_kernel": auto_pick,
+        "auto_reason": why["reason"],
+    })
+    for kernel in ("bitset", "merge"):
+        index = build_index(hg, kernel)
+        t, _ = timed(lambda: batch_intersections(index, ea, eb))
+        rate = len(pairs) / max(t, 1e-12)
+        entry[f"{kernel}_pairs_per_sec"] = rate
+        entry[f"{kernel}_index_bytes"] = index.nbytes
+        row(
+            f"motifs/{name}/intersect_{kernel}", t * 1e6,
+            f"pairs={len(pairs)};pairs_per_s={rate:.3g};"
+            f"auto={auto_pick}",
+        )
+
+
+def bench_census(name: str, hg, results: dict) -> None:
+    engine = Engine()
+    spec = AnalyticsSpec(hg)
+    t0 = time.perf_counter()
+    res = engine.analyze(spec, intersect_kernel="auto")
+    exact_s = time.perf_counter() - t0
+    census = res.value
+    entry = results[name]
+    entry.update(
+        census_total=int(census.total),
+        census_wall_s=exact_s,
+        census_kernel=res.kernel,
+        census_representation=res.representation,
+    )
+    row(
+        f"motifs/{name}/census_exact", exact_s * 1e6,
+        f"total={census.total};triples={census.n_triples};"
+        f"kernel={res.kernel};representation={res.representation}",
+    )
+    t0 = time.perf_counter()
+    est = engine.analyze(
+        AnalyticsSpec(hg, mode="sample", n_samples=2000, seed=1)
+    ).value
+    sample_s = time.perf_counter() - t0
+    rel_err = abs(est.total - census.total) / max(census.total, 1)
+    entry.update(sample_wall_s=sample_s, sample_rel_err=float(rel_err))
+    row(
+        f"motifs/{name}/census_sampled", sample_s * 1e6,
+        f"total~{est.total:.0f};rel_err={rel_err:.3f};"
+        f"samples={est.n_samples}",
+    )
+
+
+def run() -> None:
+    results: dict = {}
+    # Small vocabulary: bitset word lanes win.  dblp-regime at CI scale.
+    small = make_dataset("dblp", scale=0.004 * SCALE, seed=0)
+    # Large vocabulary, small cardinalities: sorted-merge wins (word
+    # count scales with |V|, merge work with max cardinality only).
+    large = powerlaw_hypergraph(
+        int(400_000 * SCALE), int(3_000 * SCALE),
+        mean_cardinality=3.0, max_cardinality=24, seed=0,
+    )
+    bench_kernels("small_vocab", small, results)
+    bench_kernels("large_vocab", large, results)
+    picks = {results["small_vocab"]["auto_kernel"],
+             results["large_vocab"]["auto_kernel"]}
+    assert picks == {"bitset", "merge"}, (
+        f"auto must pick different kernels for small vs large "
+        f"vocabularies, got {picks}"
+    )
+    bench_census("small_vocab", small, results)
+    bench_census("large_vocab", large, results)
+    emit_json("motifs", results)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,7 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -28,3 +29,16 @@ def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def emit_json(name: str, payload: dict) -> str:
+    """Write a machine-readable benchmark artifact ``BENCH_<name>.json``
+    (the nightly CI job uploads these) next to the CSV rows on stdout.
+
+    ``BENCH_OUTPUT_DIR`` overrides the destination directory."""
+    out_dir = os.environ.get("BENCH_OUTPUT_DIR", ".")
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"wrote {path}", flush=True)
+    return path

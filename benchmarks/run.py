@@ -11,6 +11,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_loc,
+        bench_motifs,
         bench_partitioning,
         bench_representation,
         bench_roofline,
@@ -25,6 +26,7 @@ def main() -> None:
         ("scaling (Figs 12-14)", bench_scaling.run),
         ("vs_specialized (Fig 15)", bench_vs_specialized.run),
         ("roofline (EXPERIMENTS §Roofline)", bench_roofline.run),
+        ("motifs (batch analytics)", bench_motifs.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

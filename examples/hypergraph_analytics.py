@@ -4,6 +4,11 @@ distributed over host devices, letting the ``Engine`` facade pick the
 partitioning strategy (min projected sync volume) and the backend
 (replicated vs sharded by the sync cost model) automatically.
 
+Then the *batch* mode on the same facade: ``Engine.analyze`` runs the
+h-motif census (connected 3-hyperedge overlap patterns, Lee et al.
+2020), picking the intersection-kernel path (bitset word lanes vs
+sorted-merge) and tiling hyperedge-pair blocks across the same mesh.
+
 Run: PYTHONPATH=src python examples/hypergraph_analytics.py
 (spawns 8 forced host devices; set REPRO_DEVICES to change)
 """
@@ -50,3 +55,25 @@ v_dist, _ = res.value
 match = bool(np.array_equal(np.asarray(v_dist), np.asarray(v_local)))
 print(f"distributed == local: {match}")
 print(f"communities found: {len(np.unique(np.asarray(v_dist)))}")
+
+# -- batch analytics on the same facade: the h-motif census --------------
+from repro.core import AnalyticsSpec  # noqa: E402
+
+ares = engine.analyze(AnalyticsSpec(hg))
+census = ares.value
+print(f"\nh-motif census: representation={ares.representation} "
+      f"kernel={ares.kernel} backend={ares.backend} mode={ares.mode}")
+for axis, why in ares.decision.items():
+    reason = why.get("reason") if isinstance(why, dict) else why
+    print(f"  {axis}: {reason}")
+counts = census.counts
+print(f"  {census.total:.0f} connected 3-hyperedge patterns over "
+      f"{census.n_pairs} overlapping pairs; top classes: "
+      + ", ".join(f"m{m}={counts[m]:.0f}"
+                  for m in np.argsort(counts)[::-1][:4]))
+
+# exact and sharded-vs-local agreement, same invariant as the iterative
+# path: every design point returns the same numbers.
+a_local = Engine().analyze(AnalyticsSpec(hg))
+print("sharded census == local census: "
+      f"{bool(np.array_equal(counts, a_local.value.counts))}")

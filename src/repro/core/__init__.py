@@ -22,6 +22,12 @@ Module map — one API, many design points:
   max-iters), resolves ``"auto"`` fields with small cost models
   (``select_representation``, ``select_backend``, ``select_partition``)
   and reports the chosen design point on the returned ``Result``.
+  ``Engine.analyze`` is the batch twin: an ``AnalyticsSpec`` (h-motif
+  census / pair intersections, ``repro.motifs``) resolved over the
+  same axes — representation (materialize pair intersections via the
+  dual clique expansion vs derive from the incidence), intersection
+  kernel (bitset vs sorted-merge), backend (local vs pair blocks tiled
+  across the mesh).
 
 Callers should construct an ``Engine`` (or use the algorithm wrappers'
 ``engine=`` parameter); ``compute`` / ``distributed_compute`` remain
@@ -32,6 +38,8 @@ from repro.core.api import Program, ProcedureOut, constant_initial_msg
 from repro.core.engine import compute, deliver, superstep_pair
 from repro.core.clique import Graph, to_graph, clique_expansion_size
 from repro.core.executor import (
+    AnalyticsResult,
+    AnalyticsSpec,
     Engine,
     ExecutionConfig,
     Result,
@@ -41,6 +49,8 @@ from repro.core.executor import (
 )
 
 __all__ = [
+    "AnalyticsResult",
+    "AnalyticsSpec",
     "HyperGraph",
     "Program",
     "ProcedureOut",

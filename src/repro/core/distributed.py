@@ -53,6 +53,8 @@ class DistContext:
     n_parts: int
     nv_pad: int
     ne_pad: int
+    nv_real: int               # unpadded entity counts (activity stats
+    ne_real: int               # and halting ignore padding slots)
 
 
 def _local_combine(program: Program, rows, dst_ids, num_dst, live):
@@ -93,13 +95,16 @@ def _cross_combine(program: Program, partials, axis: str):
 
 def _cross_combine_scatter(program: Program, partials, axis: str,
                            n_parts: int):
-    """Merge partials and keep only this partition's id-range block.
+    """Merge partials and keep only this partition's id-range block — a
+    true reduce-scatter for every monoid.
 
-    sum -> ``psum_scatter`` (reduce-scatter, P× cheaper than all-reduce);
-    max/min -> ``pmax/pmin`` then static slice (XLA lowers to all-reduce;
-    a true reduce-scatter for min/max is a §Perf item).
+    sum -> ``psum_scatter`` (XLA's fused reduce-scatter); max/min have
+    no fused collective, so reduce-scatter is built from its definition:
+    ``all_to_all`` transposes the per-partition blocks (each device
+    receives every device's copy of *its* block — O(n) bytes moved, vs
+    the O(n log P) all-reduce a pmax/pmin+slice pays) and a local
+    ``max``/``min`` over the received stack finishes the reduction.
     """
-    idx = jax.lax.axis_index(axis)
 
     def one(leaf):
         monoid = program.monoid_for(leaf)
@@ -107,13 +112,16 @@ def _cross_combine_scatter(program: Program, partials, axis: str,
             return jax.lax.psum_scatter(
                 leaf, axis, scatter_dimension=0, tiled=True
             )
+        if monoid.name not in ("max", "min"):
+            raise NotImplementedError(monoid.name)
         block = leaf.shape[0] // n_parts
-        merged = (
-            jax.lax.pmax(leaf, axis)
-            if monoid.name == "max"
-            else jax.lax.pmin(leaf, axis)
+        chunks = leaf.reshape((n_parts, block) + leaf.shape[1:])
+        swapped = jax.lax.all_to_all(
+            chunks, axis, split_axis=0, concat_axis=0
         )
-        return jax.lax.dynamic_slice_in_dim(merged, idx * block, block, 0)
+        reduce = jnp.max if monoid.name == "max" else jnp.min
+        return reduce(swapped.reshape((n_parts, block) + leaf.shape[1:]),
+                      axis=0)
 
     return jax.tree.map(one, partials)
 
@@ -163,15 +171,18 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
     )
     msg_to_v_next = _cross_combine(he_program, partial_v, ctx.axis)
 
-    def count(active, n):
+    def count(active, n_real):
+        # Activity over *real* entities only: padding slots must not
+        # leak into the observable stats (or the halting decision).
         if active is None:
-            return jnp.asarray(n, jnp.int32)
-        return active.sum().astype(jnp.int32)
+            return jnp.asarray(n_real, jnp.int32)
+        return active[:n_real].sum().astype(jnp.int32)
 
-    n_active = count(v_out.active, ctx.nv_pad) + count(
-        he_out.active, ctx.ne_pad
+    stats = (
+        count(v_out.active, ctx.nv_real),
+        count(he_out.active, ctx.ne_real),
     )
-    return v_out.attr, he_out.attr, msg_to_v_next, n_active
+    return v_out.attr, he_out.attr, msg_to_v_next, stats
 
 
 # --------------------------------------------------------------------------
@@ -239,16 +250,20 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
         he_program, partial_v, ctx.axis, ctx.n_parts
     )
 
-    def count(active):
-        if active is None:
-            return jnp.asarray(0, jnp.int32)  # "all active" handled below
-        return jax.lax.psum(active.sum().astype(jnp.int32), ctx.axis)
+    def count(active, ids, n_real):
+        # Real-entity activity, globalized with one psum so every
+        # partition carries the same (replicated) stat.
+        real = ids < n_real
+        local = (
+            real if active is None else (active & real)
+        ).sum().astype(jnp.int32)
+        return jax.lax.psum(local, ctx.axis)
 
-    if v_out.active is None and he_out.active is None:
-        n_active = jnp.asarray(1, jnp.int32)  # never halt
-    else:
-        n_active = count(v_out.active) + count(he_out.active)
-    return v_out.attr, he_out.attr, msg_to_v_next_sh, n_active
+    stats = (
+        count(v_out.active, v_ids, ctx.nv_real),
+        count(he_out.active, he_ids, ctx.ne_real),
+    )
+    return v_out.attr, he_out.attr, msg_to_v_next_sh, stats
 
 
 # --------------------------------------------------------------------------
@@ -276,11 +291,17 @@ def distributed_compute(
     axis: str = "data",
     backend: str = "replicated",
     feature_axis: str | None = None,
+    return_stats: bool = False,
 ) -> HyperGraph:
     """Run ``compute`` distributed over ``mesh[axis]`` per ``plan``.
 
     ``feature_axis``: optional mesh axis to shard trailing feature dims
     over (2-D hypergraph parallelism; DESIGN.md §6).
+
+    ``return_stats``: also return per-superstep ``(v_active, he_active)``
+    activity traces (int32, length ``max_iters``) — the scan trace
+    threaded out through ``shard_map`` as replicated outputs, matching
+    the local engine's ``return_stats`` bit for bit.
     """
     n_parts = plan.n_parts
     assert mesh.shape[axis] == n_parts, (
@@ -290,7 +311,8 @@ def distributed_compute(
     nv_pad = _pad_to(hg.n_vertices, n_parts)
     ne_pad = _pad_to(hg.n_hyperedges, n_parts)
     ctx = DistContext(
-        axis=axis, n_parts=n_parts, nv_pad=nv_pad, ne_pad=ne_pad
+        axis=axis, n_parts=n_parts, nv_pad=nv_pad, ne_pad=ne_pad,
+        nv_real=hg.n_vertices, ne_real=hg.n_hyperedges,
     )
 
     v_deg = _pad_leading(hg.degrees(), nv_pad)
@@ -330,32 +352,36 @@ def distributed_compute(
 
             def go(args):
                 step, v_a, he_a, msg = args
-                nv_a, nhe_a, nmsg, n_active = superstep(
+                nv_a, nhe_a, nmsg, stats = superstep(
                     ctx, None, programs, degs_local,
                     step, v_a, he_a, msg, src, dst, mask,
                 )
-                return nv_a, nhe_a, nmsg, n_active == 0
+                v_act, he_act = stats
+                return nv_a, nhe_a, nmsg, (v_act + he_act) == 0, stats
 
             def skip(args):
                 _, v_a, he_a, msg = args
-                return v_a, he_a, msg, jnp.asarray(True)
+                zero = jnp.asarray(0, jnp.int32)
+                return v_a, he_a, msg, jnp.asarray(True), (zero, zero)
 
-            nv_a, nhe_a, nmsg, halted2 = jax.lax.cond(
+            nv_a, nhe_a, nmsg, halted2, stats = jax.lax.cond(
                 halted, skip, go, (step, v_a, he_a, msg)
             )
-            return (step + 2, nv_a, nhe_a, nmsg, halted | halted2), None
+            return (step + 2, nv_a, nhe_a, nmsg, halted | halted2), stats
 
         init = (
             jnp.asarray(0, jnp.int32), v_attr, he_attr, msg0,
             jnp.asarray(False),
         )
-        (_, v_a, he_a, _, _), _ = jax.lax.scan(
+        (_, v_a, he_a, _, _), (v_trace, he_trace) = jax.lax.scan(
             body, init, None, length=max_iters
         )
-        return v_a, he_a
+        return v_a, he_a, v_trace, he_trace
 
     # replication checking off: the halt flag is partition-uniform by
-    # construction, which 0.4.x check_rep cannot prove.
+    # construction, which 0.4.x check_rep cannot prove.  The activity
+    # traces are likewise partition-uniform (psum'd / computed on the
+    # replicated full-size buffers), so their out_spec is P().
     mapped = _shard_map(
         run,
         mesh=mesh,
@@ -363,13 +389,16 @@ def distributed_compute(
             state_spec, state_spec, state_spec, deg_spec, deg_spec,
             edge_spec, edge_spec, edge_spec,
         ),
-        out_specs=(state_spec, state_spec),
+        out_specs=(state_spec, state_spec, P(), P()),
     )
     with mesh:
-        v_out, he_out = jax.jit(mapped)(
+        v_out, he_out, v_trace, he_trace = jax.jit(mapped)(
             v_attr, he_attr, msg0, v_deg, he_card,
             shard_src, shard_dst, shard_mask,
         )
     unpad_v = jax.tree.map(lambda x: x[: hg.n_vertices], v_out)
     unpad_he = jax.tree.map(lambda x: x[: hg.n_hyperedges], he_out)
-    return hg.with_attrs(v_attr=unpad_v, he_attr=unpad_he)
+    out = hg.with_attrs(v_attr=unpad_v, he_attr=unpad_he)
+    if return_stats:
+        return out, (v_trace, he_trace)
+    return out

@@ -25,14 +25,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping
 
+import jax
 import numpy as np
 
 from repro.core.clique import clique_expansion_size, to_graph
 from repro.core.engine import compute, compute_jit
 from repro.core.hypergraph import HyperGraph
 
+from repro.motifs.intersect import INTERSECT_KERNELS
+
 REPRESENTATIONS = ("auto", "bipartite", "clique")
 BACKENDS = ("auto", "local", "replicated", "sharded")
+ANALYTICS_TASKS = ("hmotif_census", "pair_intersections")
+ANALYTICS_MODES = ("auto", "exact", "sample")
 
 Pytree = Any
 
@@ -60,8 +65,11 @@ class ExecutionConfig:
       jit: wrap the local engine in ``jax.jit`` (distributed path is
         always jitted by construction).
       max_iters: overrides ``spec.max_iters`` when set.
-      collect_stats: return per-superstep activity counters (local
-        backend only — the distributed scan does not surface them yet).
+      collect_stats: return per-superstep activity counters.  All
+        backends: the distributed scan threads its trace out through
+        ``shard_map`` out_specs (replicated — counts are psum'd), and
+        counts exclude padding slots, so every backend reports the
+        same numbers as the local engine.
       clique_edge_budget: clique expansion is auto-picked only when its
         (symmetrized) edge count is within this factor of the bipartite
         incidence count — the build cost and memory are the paper's
@@ -70,6 +78,11 @@ class ExecutionConfig:
         are below ``bias`` x the full-replication sync bound; the bias
         captures replicated's lower constant factor (one fused psum vs
         all_gather + psum_scatter).
+      intersect_kernel: ``bitset`` | ``merge`` | ``auto`` — the
+        hyperedge-pair intersection kernel the batch analytics mode
+        (``Engine.analyze``) runs; iterative ``run`` ignores it.
+        ``auto`` = ``repro.motifs.select_intersect_kernel`` (word lanes
+        vs sort-merge work per pair).
     """
 
     representation: str = "auto"
@@ -82,6 +95,7 @@ class ExecutionConfig:
     collect_stats: bool = False
     clique_edge_budget: float = 4.0
     replicated_bias: float = 0.5
+    intersect_kernel: str = "auto"
 
     def __post_init__(self):
         if self.representation not in REPRESENTATIONS:
@@ -92,6 +106,11 @@ class ExecutionConfig:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend must be one of {BACKENDS}, got {self.backend!r}"
+            )
+        if self.intersect_kernel not in INTERSECT_KERNELS:
+            raise ValueError(
+                f"intersect_kernel must be one of {INTERSECT_KERNELS}, "
+                f"got {self.intersect_kernel!r}"
             )
 
 
@@ -109,7 +128,7 @@ class Result:
         clique executions don't partition).
       partition_stats: the plan's ``PartitionStats``, or ``None``.
       superstep_stats: ``(v_active, he_active)`` int32 arrays of length
-        ``max_iters`` when ``collect_stats`` was set (local backend),
+        ``max_iters`` when ``collect_stats`` was set (any backend),
         else ``None``.
       decision: cost-model numbers behind each ``auto`` choice —
         a dict of dicts, one entry per resolved axis.
@@ -122,6 +141,75 @@ class Result:
     partition: str | None = None
     partition_stats: Any = None
     superstep_stats: Any = None
+    decision: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsSpec:
+    """A batch analytics workload — the non-iterative counterpart of
+    ``AlgorithmSpec``, consumed by ``Engine.analyze``.
+
+    Attributes:
+      hg: the input hypergraph.
+      task: ``hmotif_census`` (classify connected 3-hyperedge patterns
+        into the 26 h-motif classes) or ``pair_intersections``
+        (intersection size per hyperedge pair).
+      mode: census only — ``exact`` enumerates every connected triple,
+        ``sample`` runs the uniform linked-pair estimator, ``auto``
+        picks by the overlap-pair budget below.
+      n_samples / seed / confidence: sampling-estimator parameters.
+      pairs: ``pair_intersections`` only — optional ``(ea, eb)`` id
+        arrays; ``None`` = every overlapping pair.
+      exact_pair_budget: ``mode="auto"`` runs exact while the overlap
+        graph has at most this many linked pairs.
+      tile: pair-batch tile size for the intersection kernel.
+    """
+
+    hg: HyperGraph
+    task: str = "hmotif_census"
+    mode: str = "auto"
+    n_samples: int = 4000
+    seed: int = 0
+    confidence: float = 0.95
+    pairs: Any = None
+    exact_pair_budget: int = 200_000
+    tile: int = 2048
+    name: str = "hmotifs"
+
+    def __post_init__(self):
+        if self.task not in ANALYTICS_TASKS:
+            raise ValueError(
+                f"task must be one of {ANALYTICS_TASKS}, got {self.task!r}"
+            )
+        if self.mode not in ANALYTICS_MODES:
+            raise ValueError(
+                f"mode must be one of {ANALYTICS_MODES}, got {self.mode!r}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticsResult:
+    """What a batch analytics execution produced, plus its design point.
+
+    Attributes:
+      value: ``Census`` (exact) / ``CensusEstimate`` (sampled) for the
+        census task; ``(pairs, sizes)`` for ``pair_intersections``.
+      representation: ``clique`` = pairwise intersections materialized
+        from the dual clique expansion; ``bipartite`` = derived on the
+        fly from the incidence by the kernel.
+      kernel: ``bitset`` | ``merge`` — the intersection kernel path.
+      backend: ``local`` | ``sharded`` (pair blocks tiled across the
+        mesh).
+      mode: ``exact`` | ``sample`` (census task; ``None`` otherwise).
+      decision: cost-model numbers behind each ``auto`` choice.
+    """
+
+    value: Any
+    config: ExecutionConfig
+    representation: str
+    kernel: str
+    backend: str
+    mode: str | None = None
     decision: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -165,34 +253,55 @@ def select_representation(
     return "bipartite", why
 
 
+def state_width_bytes(attr: Pytree, n: int, default: float = 4.0) -> float:
+    """Bytes of state per entity in an attribute pytree with leading dim
+    ``n`` (one float32 dim when there is no state to measure)."""
+    leaves = [leaf for leaf in jax.tree.leaves(attr) if hasattr(leaf, "size")]
+    if not leaves or n <= 0:
+        return default
+    total = sum(leaf.size * leaf.dtype.itemsize for leaf in leaves)
+    return max(float(total) / n, 1.0)
+
+
 def select_backend(
     plan,
     n_vertices: int,
     n_hyperedges: int,
     *,
     replicated_bias: float = 0.5,
+    v_state_bytes: float = 4.0,
+    he_state_bytes: float = 4.0,
 ) -> tuple[str, dict]:
     """Replicated vs sharded for one partition plan.
 
     The replicated backend syncs a *full-size* state buffer across every
     partition each half-superstep — equivalent to refreshing ``P - 1``
-    replicas of every entity: ``full_sync = 2 * 4 * (P - 1) * (|V|+|E|)``
-    bytes per float32 state dim.  The sharded backend's traffic tracks the
-    replicas the edge cut actually created, which is exactly
-    ``PartitionStats.sync_bytes_per_dim``.  Sharded wins when its
-    projected sync is below ``replicated_bias`` x the full bound; the
-    bias (< 1) favors replicated for well-connected small states where
-    its single fused collective is cheaper in practice (the paper's
-    apache/dblp regime).
+    replicas of every entity:
+    ``full_sync = 2 * (P - 1) * (w_v |V| + w_he |E|)`` bytes, where the
+    widths are the spec's actual bytes of state per vertex / hyperedge
+    (multi-dim attributes count every dim — bytes do NOT cancel out of
+    the comparison, because the two sides can be weighted differently).
+    The sharded backend's traffic tracks the replicas the edge cut
+    actually created, weighted the same way
+    (``PartitionStats.sync_bytes``).  Sharded wins when its projected
+    sync is below ``replicated_bias`` x the full bound; the bias (< 1)
+    favors replicated for well-connected small states where its single
+    fused collective is cheaper in practice (the paper's apache/dblp
+    regime).
     """
     stats = plan.stats
     p = plan.n_parts
-    full_sync = 2.0 * 4.0 * max(p - 1, 0) * (n_vertices + n_hyperedges)
-    sharded_sync = float(stats.sync_bytes_per_dim)
+    full_sync = 2.0 * max(p - 1, 0) * (
+        v_state_bytes * n_vertices + he_state_bytes * n_hyperedges
+    )
+    sharded_sync = stats.sync_bytes(v_state_bytes, he_state_bytes)
     why = {
         "n_parts": p,
-        "sync_bytes_per_dim": sharded_sync,
+        "sync_bytes_per_dim": float(stats.sync_bytes_per_dim),
+        "sharded_sync_bytes": sharded_sync,
         "full_replication_sync_bytes": full_sync,
+        "v_state_bytes": v_state_bytes,
+        "he_state_bytes": he_state_bytes,
         "replicated_bias": replicated_bias,
     }
     if p <= 1:
@@ -377,6 +486,12 @@ class Engine:
             spec.hg0.n_vertices,
             spec.hg0.n_hyperedges,
             replicated_bias=cfg.replicated_bias,
+            v_state_bytes=state_width_bytes(
+                spec.hg0.v_attr, spec.hg0.n_vertices
+            ),
+            he_state_bytes=state_width_bytes(
+                spec.hg0.he_attr, spec.hg0.n_hyperedges
+            ),
         )
         return backend, plan, why, part_why
 
@@ -497,7 +612,11 @@ class Engine:
             he_program=spec.he_program,
             axis=resolved.axis,
             backend=resolved.backend,
+            return_stats=resolved.collect_stats,
         )
+        stats = None
+        if resolved.collect_stats:
+            out, stats = out
         return Result(
             value=spec.extract(out),
             config=resolved,
@@ -505,5 +624,216 @@ class Engine:
             backend=resolved.backend,
             partition=plan.name,
             partition_stats=plan.stats,
+            superstep_stats=stats,
+            decision=decision,
+        )
+
+    # -- batch analytics -----------------------------------------------------
+
+    def _resolve_analytics(
+        self, spec: "AnalyticsSpec", cfg: ExecutionConfig, n_pairs: int
+    ) -> tuple[ExecutionConfig, str | None, dict]:
+        """Resolve the batch design point given the overlap-pair count.
+
+        Returns ``(resolved_config, mode, decision)``.  Same cost-model
+        seam as ``resolve``: representation weighs the (dual) clique
+        expansion against the incidence via ``clique_edge_budget``;
+        the kernel axis is ``select_intersect_kernel``; the backend
+        tiles pair blocks across the mesh when one is available.
+        """
+        from repro.motifs import select_intersect_kernel
+
+        decision: dict[str, Any] = {}
+
+        if cfg.intersect_kernel == "auto":
+            kernel, kernel_why = select_intersect_kernel(spec.hg)
+        else:
+            kernel = cfg.intersect_kernel
+            kernel_why = {"reason": "explicitly configured"}
+        decision["kernel"] = kernel_why
+
+        if cfg.representation == "auto":
+            # The paper's §IV-A tradeoff, applied to the *dual*: clique
+            # expansion of the dual materializes every pairwise
+            # intersection; choose it only while the expansion stays
+            # within the same edge budget the iterative path uses.
+            dual_edges = 2 * n_pairs
+            budget = cfg.clique_edge_budget * max(spec.hg.nnz, 1)
+            representation = "clique" if dual_edges <= budget else "bipartite"
+            decision["representation"] = {
+                "dual_clique_edges": dual_edges,
+                "bipartite_edges": int(spec.hg.nnz),
+                "edge_budget": float(budget),
+                "reason": (
+                    "dual expansion within edge budget: materialize "
+                    "pair intersections"
+                    if representation == "clique"
+                    else "dual expansion exceeds edge budget: derive "
+                    "intersections from the incidence"
+                ),
+            }
+        else:
+            representation = cfg.representation
+            decision["representation"] = {"reason": "explicitly configured"}
+
+        if cfg.backend == "replicated":
+            raise ValueError(
+                "backend='replicated' does not apply to batch analytics "
+                "(no replicated superstep state); use 'sharded' to tile "
+                "pair blocks across the mesh, or 'local'"
+            )
+        if cfg.backend == "sharded" and self.mesh is None:
+            raise ValueError(
+                "backend='sharded' needs a mesh; construct "
+                "Engine(mesh=...) or use backend='local'"
+            )
+        if cfg.backend in ("local", "sharded"):
+            backend = cfg.backend
+            decision["backend"] = {"reason": "explicitly configured"}
+        elif self.mesh is not None:
+            backend = "sharded"
+            decision["backend"] = {
+                "reason": "mesh available: tile hyperedge-pair blocks "
+                "across it"
+            }
+        else:
+            backend = "local"
+            decision["backend"] = {"reason": "no mesh available"}
+
+        mode: str | None = None
+        if spec.task == "hmotif_census":
+            enumerable = spec.hg.n_hyperedges < (1 << 21)
+            if spec.mode != "auto":
+                mode = spec.mode
+                decision["mode"] = {"reason": "explicitly configured"}
+            else:
+                mode = (
+                    "exact"
+                    if enumerable and n_pairs <= spec.exact_pair_budget
+                    else "sample"
+                )
+                decision["mode"] = {
+                    "n_overlap_pairs": n_pairs,
+                    "exact_pair_budget": spec.exact_pair_budget,
+                    "reason": (
+                        "overlap graph within exact budget"
+                        if mode == "exact"
+                        else "overlap graph too large: sample linked pairs"
+                    ),
+                }
+            if mode == "exact" and not enumerable:
+                raise ValueError(
+                    "mode='exact' needs n_hyperedges < 2^21; use "
+                    "mode='sample'"
+                )
+
+        resolved = dataclasses.replace(
+            cfg,
+            representation=representation,
+            backend=backend,
+            intersect_kernel=kernel,
+            partition_strategy="none",
+        )
+        return resolved, mode, decision
+
+    def resolve_analytics(
+        self, spec: "AnalyticsSpec", **overrides: Any
+    ) -> tuple[ExecutionConfig, str | None, dict]:
+        """Resolve every ``"auto"`` analytics choice WITHOUT executing.
+
+        Runs the host-side overlap-pair discovery (the quantity every
+        cost term turns on) but no intersection kernels.
+        """
+        from repro.motifs import overlap_pairs_with_counts
+
+        cfg = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        pairs, _ = overlap_pairs_with_counts(spec.hg)
+        return self._resolve_analytics(spec, cfg, len(pairs))
+
+    def analyze(self, spec: "AnalyticsSpec", **overrides: Any) -> "AnalyticsResult":
+        """Execute a batch ``AnalyticsSpec`` at the configured design
+        point — the batch-mode twin of ``run``.
+
+        >>> res = Engine().analyze(AnalyticsSpec(hg))
+        >>> res.value.counts, res.kernel, res.decision
+        """
+        from repro import motifs
+
+        cfg = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        # Overlap-pair discovery is the O(sum deg^2) host-side
+        # preprocessing step; skip it when nothing consumes it — an
+        # explicit pair batch on a pinned bipartite representation
+        # needs only the kernel.
+        need_pairs = (
+            spec.task == "hmotif_census"
+            or spec.pairs is None
+            or cfg.representation in ("auto", "clique")
+        )
+        pairs = n_shared = None
+        if need_pairs:
+            pairs, n_shared = motifs.overlap_pairs_with_counts(spec.hg)
+        resolved, mode, decision = self._resolve_analytics(
+            spec, cfg, len(pairs) if pairs is not None else 0
+        )
+        index = motifs.build_index(spec.hg, resolved.intersect_kernel)
+        mesh = self.mesh if resolved.backend == "sharded" else None
+        pair_sizes = (
+            motifs.materialize_pair_sizes(spec.hg, pairs, n_shared)
+            if resolved.representation == "clique"
+            else None
+        )
+
+        if spec.task == "pair_intersections":
+            if spec.pairs is not None:
+                ea = np.asarray(spec.pairs[0], np.int64)
+                eb = np.asarray(spec.pairs[1], np.int64)
+            else:
+                ea, eb = pairs[:, 0], pairs[:, 1]
+            if pair_sizes is not None:
+                e = np.int64(spec.hg.n_hyperedges)
+                lo, hi = np.minimum(ea, eb), np.maximum(ea, eb)
+                sizes = motifs.pair_sizes_lookup(pair_sizes, lo * e + hi)
+                # The materialized table holds overlapping a < b pairs
+                # only; |e ∩ e| = |e| must not fall through to 0.
+                self_pair = ea == eb
+                if self_pair.any():
+                    sizes = np.where(
+                        self_pair, index.cardinalities()[ea], sizes
+                    )
+            else:
+                sizes = motifs.batch_intersections(
+                    index, ea, eb, tile=spec.tile, mesh=mesh,
+                    axis=resolved.axis,
+                ).astype(np.int64)
+            value: Any = (np.stack([ea, eb], axis=1), sizes)
+        elif mode == "exact":
+            value = motifs.exact_census(
+                spec.hg, index=index, tile=spec.tile, mesh=mesh,
+                axis=resolved.axis, pair_sizes=pair_sizes,
+                og=motifs.build_overlap_graph(spec.hg, pairs),
+            )
+        else:
+            value = motifs.sampled_census(
+                spec.hg, spec.n_samples, seed=spec.seed,
+                confidence=spec.confidence, index=index, tile=spec.tile,
+                mesh=mesh, axis=resolved.axis,
+                og=motifs.build_overlap_graph(spec.hg, pairs),
+                pair_sizes=pair_sizes,
+            )
+        return AnalyticsResult(
+            value=value,
+            config=resolved,
+            representation=resolved.representation,
+            kernel=resolved.intersect_kernel,
+            backend=resolved.backend,
+            mode=mode,
             decision=decision,
         )

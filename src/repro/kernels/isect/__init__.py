@@ -1,0 +1,3 @@
+from repro.kernels.isect.ops import pair_intersect_bitset
+
+__all__ = ["pair_intersect_bitset"]

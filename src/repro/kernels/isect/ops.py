@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the bitset intersection kernel (padding +
+row gather)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.isect.isect import isect_pallas
+
+
+def pair_intersect_bitset(
+    bits: jnp.ndarray,
+    ea: jnp.ndarray,
+    eb: jnp.ndarray,
+    *,
+    block_p: int = 512,
+    block_w: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Intersection size per hyperedge pair over a packed bitset index.
+
+    ``bits`` is the ``[E, W] uint32`` member bitset
+    (``repro.motifs.intersect.build_index(hg, "bitset").data``); ``ea`` /
+    ``eb`` are ``[P]`` hyperedge ids.  Rows are gathered host-of-kernel
+    (XLA fuses the gather), the streaming AND+popcount runs in Pallas.
+    """
+    n = ea.shape[0]
+    a = jnp.take(bits, ea, axis=0)
+    b = jnp.take(bits, eb, axis=0)
+    p_pad = -(-max(n, 1) // block_p) * block_p
+    w = bits.shape[1]
+    w_pad = -(-w // block_w) * block_w
+    a = jnp.pad(a, ((0, p_pad - n), (0, w_pad - w)))
+    b = jnp.pad(b, ((0, p_pad - n), (0, w_pad - w)))
+    out = isect_pallas(
+        a, b, block_p=block_p, block_w=block_w, interpret=interpret
+    )
+    return out[:n]

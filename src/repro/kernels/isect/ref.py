@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the bitset intersection kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_intersect_ref(
+    bits: jnp.ndarray, ea: jnp.ndarray, eb: jnp.ndarray
+) -> jnp.ndarray:
+    """[E, W] uint32 bitsets, [P] pair ids -> [P] int32 sizes."""
+    inter = jnp.take(bits, ea, axis=0) & jnp.take(bits, eb, axis=0)
+    return jax.lax.population_count(inter).astype(jnp.int32).sum(axis=1)

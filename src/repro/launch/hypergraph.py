@@ -9,6 +9,11 @@ Usage:
       --algorithm pagerank --regime dblp --scale 0.003 \
       --devices 8 --backend auto --partition auto
 
+  # batch analytics (Engine.analyze): the h-motif census
+  PYTHONPATH=src python -m repro.launch.hypergraph \
+      --algorithm motifs --regime dblp --scale 0.003 \
+      --mode auto --kernel auto --devices 4
+
 The device-count env fix must run before any jax import, hence the
 module-level XLA_FLAGS block (same pattern as ``dryrun``).
 """
@@ -23,7 +28,7 @@ def _parse(argv=None):
                     choices=["pagerank", "vertex_pagerank",
                              "pagerank_entropy", "label_propagation",
                              "sssp", "random_walk",
-                             "connected_components"])
+                             "connected_components", "motifs"])
     ap.add_argument("--regime", default="dblp",
                     help="dataset regime (apache/dblp/friendster/orkut)")
     ap.add_argument("--scale", type=float, default=0.003)
@@ -38,7 +43,15 @@ def _parse(argv=None):
     ap.add_argument("--partition", default="auto",
                     help="partition strategy name or 'auto'")
     ap.add_argument("--stats", action="store_true",
-                    help="print per-superstep activity (local backend)")
+                    help="print per-superstep activity")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "exact", "sample"],
+                    help="motifs only: census mode")
+    ap.add_argument("--samples", type=int, default=4000,
+                    help="motifs only: sample count for --mode sample")
+    ap.add_argument("--kernel", default="auto",
+                    choices=["auto", "bitset", "merge"],
+                    help="motifs only: intersection kernel path")
     return ap.parse_args(argv)
 
 
@@ -75,7 +88,7 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
-    from repro.core import Engine
+    from repro.core import AnalyticsSpec, Engine
     from repro.data import make_dataset
     from repro.launch.mesh import make_host_mesh
 
@@ -90,7 +103,40 @@ def main(argv=None) -> int:
         backend=args.backend,
         partition_strategy=args.partition,
         collect_stats=args.stats,
+        intersect_kernel=args.kernel,
     )
+
+    if args.algorithm == "motifs":
+        res = engine.analyze(AnalyticsSpec(
+            hg, mode=args.mode, n_samples=args.samples, seed=args.seed,
+        ))
+        print(f"design point: representation={res.representation} "
+              f"kernel={res.kernel} backend={res.backend} "
+              f"mode={res.mode}")
+        for ax, why in res.decision.items():
+            reason = why.get("reason") if isinstance(why, dict) else why
+            print(f"  {ax}: {reason}")
+        c = res.value
+        if res.mode == "exact":
+            print(f"census: {c.total} connected triples over "
+                  f"{c.n_pairs} overlapping pairs "
+                  f"({c.n_duplicate_triples} duplicate-hyperedge "
+                  f"triples dropped)")
+            counts = c.counts
+        else:
+            print(f"census (estimated from {c.n_samples} sampled "
+                  f"linked pairs of {c.n_pairs}): total ~{c.total:.0f}")
+            counts = c.counts
+        top = np.argsort(counts)[::-1][:6]
+        for m in top:
+            if counts[m] > 0:
+                line = f"  h-motif {m:2d}: {counts[m]:.0f}"
+                if res.mode == "sample":
+                    line += (f"  [{c.ci_low[m]:.0f}, {c.ci_high[m]:.0f}] "
+                             f"@{c.confidence:.0%}")
+                print(line)
+        return 0
+
     spec = build_spec(args.algorithm, hg, args.iters)
     res = engine.run(spec)
 

@@ -1,0 +1,65 @@
+"""Batch hypergraph analytics: hyperedge intersections and h-motifs.
+
+The batch counterpart of the iterative superstep executor — MESH's
+flexibility claim exercised on a workload with no supersteps at all.
+Module map:
+
+* ``intersect`` — the tiled hyperedge-pair intersection kernel: a
+  dense-bitset path (uint32 vertex-id lanes, small vocabularies) and a
+  sorted-merge path (``searchsorted`` over padded CSR member lists,
+  large vocabularies), selected by ``select_intersect_kernel``; both
+  tile locally (``lax.map``) and across a mesh (``shard_map`` pair
+  blocks).
+* ``hmotifs`` — the 26 h-motif classes (Lee et al. 2020), derived
+  programmatically from the emptiness patterns of the 7 Venn regions of
+  a hyperedge triple; connected-triple enumeration over the overlap
+  graph; the exact census.
+* ``sampling`` — the uniform linked-pair sampling estimator
+  (MoCHy-A style) with normal-approximation confidence intervals.
+
+Callers should route through ``Engine.analyze`` (``repro.core.executor``)
+so representation / kernel / backend selection stays on the facade's
+cost-model seam.
+"""
+from repro.motifs.hmotifs import (
+    CLASS_OF_PATTERN,
+    Census,
+    N_HMOTIF_CLASSES,
+    build_overlap_graph,
+    classify_patterns,
+    connected_triples,
+    exact_census,
+    materialize_pair_sizes,
+    overlap_pairs,
+    overlap_pairs_with_counts,
+    pair_sizes_lookup,
+)
+from repro.motifs.intersect import (
+    INTERSECT_KERNELS,
+    PairIndex,
+    batch_intersections,
+    build_index,
+    select_intersect_kernel,
+)
+from repro.motifs.sampling import CensusEstimate, sampled_census
+
+__all__ = [
+    "CLASS_OF_PATTERN",
+    "Census",
+    "CensusEstimate",
+    "INTERSECT_KERNELS",
+    "N_HMOTIF_CLASSES",
+    "PairIndex",
+    "batch_intersections",
+    "build_index",
+    "build_overlap_graph",
+    "classify_patterns",
+    "connected_triples",
+    "exact_census",
+    "materialize_pair_sizes",
+    "overlap_pairs",
+    "overlap_pairs_with_counts",
+    "pair_sizes_lookup",
+    "sampled_census",
+    "select_intersect_kernel",
+]

@@ -27,9 +27,27 @@ class PartitionStats:
     # projected bytes moved per superstep per float32 of entity state:
     #   sync cost of every replica beyond the master copy, both directions.
     sync_bytes_per_dim: float
+    # the per-side replica surplus behind sync_bytes_per_dim (number of
+    # extra entity copies the cut created); kept separate so consumers
+    # can weight each side by its actual state width in bytes
+    # (select_backend folds attribute widths in — wide hyperedge state
+    # must not be priced like a scalar vertex rank).
+    v_extra_replicas: float = 0.0
+    he_extra_replicas: float = 0.0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def sync_bytes(
+        self, v_state_bytes: float = 4.0, he_state_bytes: float = 4.0
+    ) -> float:
+        """Projected per-superstep sync volume with each side weighted
+        by its state width (bytes per entity); the historical
+        ``sync_bytes_per_dim`` is the 4-byte-uniform special case."""
+        return 2.0 * (
+            v_state_bytes * self.v_extra_replicas
+            + he_state_bytes * self.he_extra_replicas
+        )
 
 
 @dataclasses.dataclass
@@ -99,16 +117,17 @@ def build_plan(
     # once per superstep -> 2 transfers x 4 bytes per state dim.
     n_v_present = len(np.unique(src)) if nnz else 0
     n_he_present = len(np.unique(dst)) if nnz else 0
-    extra_replicas = (
-        (v_rep - 1.0) * n_v_present + (he_rep - 1.0) * n_he_present
-    )
+    v_extra = max((v_rep - 1.0) * n_v_present, 0.0)
+    he_extra = max((he_rep - 1.0) * n_he_present, 0.0)
     stats = PartitionStats(
         n_parts=n_parts,
         edge_balance=float(counts.max() / mean_load) if nnz else 1.0,
         vertex_replication=float(v_rep),
         hyperedge_replication=float(he_rep),
         pad_fraction=float(1.0 - nnz / (n_parts * shard_len)),
-        sync_bytes_per_dim=float(2 * 4 * max(extra_replicas, 0.0)),
+        sync_bytes_per_dim=float(2 * 4 * (v_extra + he_extra)),
+        v_extra_replicas=float(v_extra),
+        he_extra_replicas=float(he_extra),
     )
     return PartitionPlan(
         name=name,

@@ -268,6 +268,64 @@ def test_single_partition_prefers_replicated():
     assert backend == "replicated"
 
 
+def _hyperedge_replicating_plan(nv=80, ne=8, p=4):
+    """Every hyperedge spans all partitions (he_extra = (p-1)*ne);
+    every vertex lives on exactly one (v_extra = 0)."""
+    members_per_he = p
+    src = np.arange(ne * members_per_he, dtype=np.int32) % nv
+    dst = np.repeat(np.arange(ne, dtype=np.int32), members_per_he)
+    edge_part = (np.arange(ne * members_per_he) % p).astype(np.int32)
+    return build_plan("he_replicating", src, dst, nv, ne, edge_part, p)
+
+
+def test_select_backend_folds_state_width_in():
+    """ROADMAP open item: bytes/dim must NOT cancel out — a wide
+    hyperedge state makes the hyperedge-replicating cut pay for every
+    replica, flipping the decision replicated-wards while a scalar
+    state stays sharded."""
+    plan = _hyperedge_replicating_plan()
+    assert plan.stats.v_extra_replicas == 0.0
+    assert plan.stats.he_extra_replicas == 3 * 8  # (p-1) * ne
+
+    narrow, why_n = select_backend(plan, 80, 8)
+    assert narrow == "sharded"
+    wide, why_w = select_backend(plan, 80, 8, he_state_bytes=256.0)
+    assert wide == "replicated"
+    # the widths are visible in the decision record
+    assert why_w["he_state_bytes"] == 256.0
+    assert why_w["sharded_sync_bytes"] > why_n["sharded_sync_bytes"]
+
+
+def test_state_width_bytes_measures_pytrees():
+    import jax.numpy as jnp
+    from repro.core.executor import state_width_bytes
+
+    assert state_width_bytes(None, 10) == 4.0  # no state: one f32 dim
+    assert state_width_bytes(jnp.zeros((10,), jnp.float32), 10) == 4.0
+    assert state_width_bytes(jnp.zeros((10, 64), jnp.float32), 10) == 256.0
+    tree = {"a": jnp.zeros((10, 2), jnp.float32),
+            "b": jnp.zeros((10,), jnp.int32)}
+    assert state_width_bytes(tree, 10) == 12.0
+
+
+def test_engine_passes_state_widths_to_backend_decision():
+    """The resolved decision must carry the spec's measured widths (the
+    seam select_backend consumes)."""
+    hg = powerlaw_hypergraph(60, 40, mean_cardinality=4, seed=3)
+    spec = pagerank_spec(hg, iters=2)
+    from repro.core.executor import state_width_bytes
+
+    v_w = state_width_bytes(spec.hg0.v_attr, hg.n_vertices)
+    he_w = state_width_bytes(spec.hg0.he_attr, hg.n_hyperedges)
+    plan = partition("random_hyperedge_cut", hg, 4)
+    _, why = select_backend(
+        plan, hg.n_vertices, hg.n_hyperedges,
+        v_state_bytes=v_w, he_state_bytes=he_w,
+    )
+    assert why["v_state_bytes"] == v_w
+    assert why["he_state_bytes"] == he_w
+
+
 # --------------------------------------------------------------------------
 # three backends agree (subprocess: needs forced host devices)
 # --------------------------------------------------------------------------
@@ -283,25 +341,46 @@ BACKEND_AGREEMENT = textwrap.dedent("""
     from repro.algorithms import pagerank_spec, label_propagation_spec
 
     mesh = Mesh(np.array(jax.devices()).reshape(4), ('data',))
-    hg = powerlaw_hypergraph(48, 32, mean_cardinality=4, seed=0)
+    # odd sizes: state padding slots exist, so the activity stats must
+    # prove they exclude them.
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
     plan = partition('random_vertex_cut', hg, 4)
-    for make, exact in ((label_propagation_spec, True),
-                        (pagerank_spec, False)):
-        spec = make(hg, 6)
-        ref = Engine(backend='local').run(spec).value
+    from repro.algorithms import shortest_paths_spec
+    specs = [(label_propagation_spec(hg, 6), True),
+             (pagerank_spec(hg, 6), False),
+             # dynamic activation + halting: the stats trace actually
+             # varies per superstep (and the min monoid exercises the
+             # all_to_all reduce-scatter on the sharded backend).
+             (shortest_paths_spec(hg, 0, 8), True)]
+    for spec, exact in specs:
+        ref = Engine(backend='local').run(spec, collect_stats=True)
         for backend in ('replicated', 'sharded'):
-            got = Engine(plan=plan, mesh=mesh,
-                         backend=backend).run(spec).value
-            for a, b in zip(ref, got):
+            got = Engine(plan=plan, mesh=mesh, backend=backend).run(
+                spec, collect_stats=True)
+            for a, b in zip(ref.value, got.value):
                 a, b = np.asarray(a), np.asarray(b)
                 if exact:
-                    assert np.array_equal(a, b), (make.__name__, backend)
+                    assert np.array_equal(a, b), (spec.name, backend)
                 else:
                     # sum monoid: partition partials reassociate fp32
                     # adds -> round-off only, everything else exact.
                     np.testing.assert_allclose(
                         a, b, rtol=2e-6, atol=1e-7,
-                        err_msg=f'{make.__name__} {backend}')
+                        err_msg=f'{spec.name} {backend}')
+            # distributed superstep stats == local, bit for bit (the
+            # shard_map out_specs threading).
+            for r, g in zip(ref.superstep_stats, got.superstep_stats):
+                assert np.array_equal(np.asarray(r), np.asarray(g)), (
+                    spec.name, backend, r, g)
+
+    # batch analytics: the sharded backend (pair blocks tiled across
+    # the mesh) equals the local census bitwise.
+    from repro.core import AnalyticsSpec
+    aspec = AnalyticsSpec(hg)
+    a_local = Engine().analyze(aspec)
+    a_shard = Engine(mesh=mesh).analyze(aspec)
+    assert a_shard.backend == 'sharded', a_shard.backend
+    assert np.array_equal(a_local.value.counts, a_shard.value.counts)
 
     # end-to-end auto decision through Engine.run: same plan + iters as
     # the sharded run above, so the compile cache is warm and the only

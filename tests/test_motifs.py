@@ -1,0 +1,309 @@
+"""The batch analytics subsystem: intersection kernels + h-motif census.
+
+Four layers of coverage:
+
+* the h-motif class tables: exactly 26 classes (Lee et al. 2020),
+  permutation-invariant classification;
+* kernel correctness: both intersection paths (bitset / merge) against
+  a python-set oracle, pairs and triples, property-tested;
+* the census: exact census cross-checked **bitwise** against an
+  O(E^3)-over-pairs brute-force reference on ≤ 64-hyperedge random
+  hypergraphs; the sampled estimator's error/CI behavior on a 10x
+  larger graph;
+* the Engine seam: ``Engine.analyze`` design-point resolution (kernel /
+  representation / backend / mode cost models), task outputs, and
+  config validation.
+"""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AnalyticsSpec, Engine, ExecutionConfig
+from repro.data import make_dataset, powerlaw_hypergraph
+from repro.motifs import (
+    CLASS_OF_PATTERN,
+    N_HMOTIF_CLASSES,
+    batch_intersections,
+    build_index,
+    exact_census,
+    materialize_pair_sizes,
+    overlap_pairs,
+    sampled_census,
+    select_intersect_kernel,
+)
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def small_hypergraph(draw):
+    nv = draw(st.integers(5, 48))
+    ne = draw(st.integers(3, 64))
+    card = draw(st.integers(2, 5))
+    seed = draw(st.integers(0, 10_000))
+    return powerlaw_hypergraph(nv, ne, mean_cardinality=card, seed=seed)
+
+
+def member_sets(hg):
+    src, dst = np.asarray(hg.src), np.asarray(hg.dst)
+    return [set(src[dst == e].tolist()) for e in range(hg.n_hyperedges)]
+
+
+def brute_force_census(hg):
+    """O(E^3) python-set reference: every unordered triple, connectivity
+    by pairwise overlap, classification via the 7 Venn regions."""
+    sets = member_sets(hg)
+    counts = np.zeros(N_HMOTIF_CLASSES, np.int64)
+    n_dup = 0
+    for a, b, c in itertools.combinations(range(hg.n_hyperedges), 3):
+        sa, sb, sc = sets[a], sets[b], sets[c]
+        links = (
+            bool(sa & sb) + bool(sb & sc) + bool(sc & sa)
+        )
+        if links < 2:
+            continue
+        regions = [
+            sa - sb - sc, sb - sa - sc, (sa & sb) - sc,
+            sc - sa - sb, (sa & sc) - sb, (sb & sc) - sa,
+            sa & sb & sc,
+        ]
+        pattern = sum((len(r) > 0) << i for i, r in enumerate(regions))
+        cls = CLASS_OF_PATTERN[pattern]
+        if cls < 0:
+            n_dup += 1
+        else:
+            counts[cls] += 1
+    return counts, n_dup
+
+
+# --------------------------------------------------------------------------
+# class tables
+# --------------------------------------------------------------------------
+
+def test_exactly_26_hmotif_classes():
+    """Lee et al. 2020: 26 h-motifs for connected triples of distinct
+    hyperedges — our table is derived programmatically and must land on
+    the published count."""
+    assert N_HMOTIF_CLASSES == 26
+    assert set(CLASS_OF_PATTERN[CLASS_OF_PATTERN >= 0]) == set(range(26))
+
+
+def test_classification_is_permutation_invariant():
+    rng = np.random.default_rng(0)
+    from repro.motifs import classify_patterns
+
+    for _ in range(50):
+        # random region sizes -> a consistent profile for each of the 6
+        # orderings of (a, b, c) must classify identically.
+        r = rng.integers(0, 3, size=7)  # a,b,c,ab,bc,ca,abc region sizes
+        a_, b_, c_, ab_, bc_, ca_, abc_ = r
+        size = {
+            0: a_ + ab_ + ca_ + abc_,
+            1: b_ + ab_ + bc_ + abc_,
+            2: c_ + bc_ + ca_ + abc_,
+        }
+        pair = {
+            frozenset((0, 1)): ab_ + abc_,
+            frozenset((1, 2)): bc_ + abc_,
+            frozenset((2, 0)): ca_ + abc_,
+        }
+        out = set()
+        for p in itertools.permutations(range(3)):
+            x, y, z = p
+            out.add(int(classify_patterns(
+                size[x], size[y], size[z],
+                pair[frozenset((x, y))], pair[frozenset((y, z))],
+                pair[frozenset((z, x))], abc_,
+            )))
+        assert len(out) == 1, (r, out)
+
+
+# --------------------------------------------------------------------------
+# intersection kernels
+# --------------------------------------------------------------------------
+
+@given(small_hypergraph(), st.integers(0, 2**31 - 1))
+def test_both_kernel_paths_match_set_oracle(hg, seed):
+    sets = member_sets(hg)
+    rng = np.random.default_rng(seed)
+    n = 64
+    ea = rng.integers(0, hg.n_hyperedges, n)
+    eb = rng.integers(0, hg.n_hyperedges, n)
+    ec = rng.integers(0, hg.n_hyperedges, n)
+    ref_pair = np.array([len(sets[a] & sets[b]) for a, b in zip(ea, eb)])
+    ref_tri = np.array(
+        [len(sets[a] & sets[b] & sets[c]) for a, b, c in zip(ea, eb, ec)]
+    )
+    for kernel in ("bitset", "merge"):
+        index = build_index(hg, kernel)
+        got_pair = batch_intersections(index, ea, eb, tile=16)
+        got_tri = batch_intersections(index, ea, eb, ec, tile=16)
+        assert np.array_equal(got_pair, ref_pair), kernel
+        assert np.array_equal(got_tri, ref_tri), kernel
+
+
+def test_kernel_cost_model_flips_on_vocabulary_size():
+    small = powerlaw_hypergraph(200, 64, mean_cardinality=4, seed=0)
+    k_small, why_small = select_intersect_kernel(small)
+    assert k_small == "bitset"
+    large = powerlaw_hypergraph(
+        300_000, 64, mean_cardinality=3, max_cardinality=16, seed=0
+    )
+    k_large, why_large = select_intersect_kernel(large)
+    assert k_large == "merge"
+    assert (
+        why_large["bitset_words_per_pair"]
+        > why_large["merge_ops_per_pair"]
+    )
+
+
+def test_overlap_pairs_match_set_oracle():
+    hg = powerlaw_hypergraph(40, 30, mean_cardinality=4, seed=5)
+    sets = member_sets(hg)
+    ref = {
+        (a, b)
+        for a, b in itertools.combinations(range(hg.n_hyperedges), 2)
+        if sets[a] & sets[b]
+    }
+    got = {tuple(p) for p in overlap_pairs(hg)}
+    assert got == ref
+
+
+# --------------------------------------------------------------------------
+# census: brute-force cross-check (the acceptance criterion)
+# --------------------------------------------------------------------------
+
+@given(small_hypergraph())
+def test_exact_census_matches_brute_force_bitwise(hg):
+    ref, ref_dup = brute_force_census(hg)
+    for kernel in ("bitset", "merge"):
+        census = exact_census(hg, kernel=kernel)
+        assert np.array_equal(census.counts, ref), kernel
+        assert census.n_duplicate_triples == ref_dup
+    # the materialized-pair (dual clique expansion) path too
+    census = exact_census(
+        hg, kernel="bitset", pair_sizes=materialize_pair_sizes(hg)
+    )
+    assert np.array_equal(census.counts, ref)
+
+
+def test_sampled_estimator_error_bounds():
+    """On a ~10x larger graph than the brute-force regime: fixed-seed
+    relative error on the total, CI coverage of the exact per-class
+    counts, and CI width shrinking with the sample count."""
+    hg = powerlaw_hypergraph(600, 400, mean_cardinality=4, seed=11)
+    exact = exact_census(hg)
+    assert exact.total > 10_000  # meaningfully larger than the 64-E regime
+
+    est = sampled_census(hg, 1500, seed=3)
+    rel_err = abs(est.total - exact.total) / exact.total
+    assert rel_err < 0.10, (est.total, exact.total)
+    covered = (
+        (exact.counts >= est.ci_low) & (exact.counts <= est.ci_high)
+    ).mean()
+    assert covered >= 0.75, covered  # 95% nominal, normal approx
+
+    wide = sampled_census(hg, 150, seed=3)
+    assert (wide.ci_high - wide.ci_low).sum() > (
+        est.ci_high - est.ci_low
+    ).sum()
+
+
+def test_sampled_estimator_is_unbiased_across_seeds():
+    hg = powerlaw_hypergraph(300, 150, mean_cardinality=4, seed=2)
+    exact = exact_census(hg)
+    totals = [sampled_census(hg, 300, seed=s).total for s in range(12)]
+    assert abs(np.mean(totals) - exact.total) / exact.total < 0.08
+
+
+# --------------------------------------------------------------------------
+# the Engine seam
+# --------------------------------------------------------------------------
+
+def test_engine_analyze_exact_census_and_decision():
+    hg = powerlaw_hypergraph(150, 100, mean_cardinality=4, seed=3)
+    res = Engine().analyze(AnalyticsSpec(hg))
+    assert res.mode == "exact"
+    assert res.backend == "local"
+    assert res.kernel in ("bitset", "merge")
+    assert {"kernel", "representation", "backend", "mode"} <= set(
+        res.decision
+    )
+    assert res.value.total == res.value.n_triples > 0
+    # explicit kernels agree with auto
+    for kernel in ("bitset", "merge"):
+        forced = Engine(intersect_kernel=kernel).analyze(AnalyticsSpec(hg))
+        assert forced.kernel == kernel
+        assert np.array_equal(forced.value.counts, res.value.counts)
+
+
+def test_engine_analyze_mode_auto_flips_on_pair_budget():
+    hg = powerlaw_hypergraph(150, 100, mean_cardinality=4, seed=3)
+    exact_cfg, mode, _ = Engine().resolve_analytics(AnalyticsSpec(hg))
+    assert mode == "exact"
+    _, mode, why = Engine().resolve_analytics(
+        AnalyticsSpec(hg, exact_pair_budget=1)
+    )
+    assert mode == "sample"
+    assert why["mode"]["n_overlap_pairs"] > 1
+
+
+def test_engine_analyze_representation_cost_model():
+    # dense small graph: few overlap pairs relative to nnz -> clique
+    # (materialized pair intersections); blow the budget -> bipartite.
+    hg = powerlaw_hypergraph(200, 40, mean_cardinality=3, seed=1)
+    res = Engine().analyze(AnalyticsSpec(hg))
+    resolved, _, why = Engine().resolve_analytics(
+        AnalyticsSpec(hg), clique_edge_budget=1e-6
+    )
+    assert resolved.representation == "bipartite"
+    forced = Engine(representation="bipartite").analyze(AnalyticsSpec(hg))
+    assert np.array_equal(forced.value.counts, res.value.counts)
+
+
+def test_engine_analyze_pair_intersections_task():
+    hg = powerlaw_hypergraph(60, 40, mean_cardinality=4, seed=9)
+    sets = member_sets(hg)
+    res = Engine().analyze(AnalyticsSpec(hg, task="pair_intersections"))
+    pairs, sizes = res.value
+    assert len(pairs) == len(sizes) and len(pairs) > 0
+    for (a, b), s in zip(pairs[:50], sizes[:50]):
+        assert len(sets[a] & sets[b]) == s
+    # explicit pair list, including self-pairs (|e ∩ e| = |e|), which
+    # must agree across the materialized-clique and kernel paths.
+    ea, eb = np.array([0, 1, 2, 4]), np.array([1, 2, 3, 4])
+    ref = [len(sets[a] & sets[b]) for a, b in zip(ea, eb)]
+    for representation in ("auto", "clique", "bipartite"):
+        res = Engine(representation=representation).analyze(
+            AnalyticsSpec(hg, task="pair_intersections", pairs=(ea, eb))
+        )
+        _, sizes = res.value
+        assert np.array_equal(sizes, ref), representation
+
+
+def test_engine_analyze_invalid_configs_rejected():
+    hg = powerlaw_hypergraph(20, 10, seed=0)
+    with pytest.raises(ValueError, match="task"):
+        AnalyticsSpec(hg, task="clustering")
+    with pytest.raises(ValueError, match="mode"):
+        AnalyticsSpec(hg, mode="guess")
+    with pytest.raises(ValueError, match="intersect_kernel"):
+        ExecutionConfig(intersect_kernel="gpu_hash")
+    with pytest.raises(ValueError, match="replicated"):
+        Engine(backend="replicated").analyze(AnalyticsSpec(hg))
+    with pytest.raises(ValueError, match="mesh"):
+        Engine(backend="sharded").analyze(AnalyticsSpec(hg))
+
+
+def test_engine_analyze_large_vocab_regime_picks_merge():
+    hg = make_dataset("friendster", scale=0.0005, seed=0)
+    big = powerlaw_hypergraph(
+        300_000, 200, mean_cardinality=3, max_cardinality=16, seed=0
+    )
+    resolved, _, _ = Engine().resolve_analytics(AnalyticsSpec(big))
+    assert resolved.intersect_kernel == "merge"
+    resolved, _, _ = Engine().resolve_analytics(AnalyticsSpec(hg))
+    assert resolved.intersect_kernel == "bitset"
