@@ -2,12 +2,19 @@
 
 On this CPU host all "devices" share one core, so wall time cannot show
 real speedup; what scales — and what we measure — is the *per-partition
-work* (edges/shard) and the projected sync volume, the quantities that
-govern Fig. 12-14 on real hardware.  Wall time is reported for reference.
+work* (edges/shard for the iterative workloads, hyperedge-pair blocks
+per device for the motif census) and the projected sync volume, the
+quantities that govern Fig. 12-14 on real hardware.  Wall time is
+reported for reference.
 
 Each (regime, P) cell also reports the backend the Engine facade's cost
 model (``select_backend``) picks at that scale — the replicated->sharded
 crossover as P grows is the design-point flexibility the facade automates.
+
+The motif census rides the same device sweep (ROADMAP open item): its
+sharded backend tiles pair blocks of ``tile`` rows across the mesh, so
+the per-device quantity is the padded pair-block length — reported per
+(regime, P) next to the auto-picked intersection kernel.
 
 The distributed executor itself runs under forced host devices in the
 separate dry-run/regression entries (tests/test_distributed.py,
@@ -17,31 +24,60 @@ from __future__ import annotations
 
 from repro.core import select_backend
 from repro.data import make_dataset
+from repro.motifs import overlap_pairs, select_intersect_kernel
 from repro.partition import partition
 
 from benchmarks.common import SCALE, row
+
+# pair-batch tile the sharded intersection kernel uses (AnalyticsSpec
+# default); per-device blocks are padded to a multiple of it.
+MOTIF_TILE = 2048
+
+DEVICE_SWEEP = (2, 4, 8, 16, 32, 64)
+
+
+def iterative_rows(regime: str, hg) -> None:
+    for n_parts in DEVICE_SWEEP:
+        plan = partition("random_both_cut", hg, n_parts)
+        s = plan.stats
+        per_shard = plan.shard_len
+        backend, _ = select_backend(
+            plan, hg.n_vertices, hg.n_hyperedges
+        )
+        row(
+            f"scaling/{regime}/p{n_parts}/edges_per_shard",
+            float(per_shard),
+            f"vrep={s.vertex_replication:.2f};"
+            f"herep={s.hyperedge_replication:.2f};"
+            f"sync_bytes={s.sync_bytes_per_dim:.0f};"
+            f"pad={s.pad_fraction:.3f};"
+            f"auto_backend={backend}",
+        )
+
+
+def motif_rows(regime: str, hg, tile: int = MOTIF_TILE) -> None:
+    """The census's device-count scaling curve: per-device pair-block
+    length under the sharded tiling of ``repro.motifs.batch_intersections``
+    (blocks are padded to ``tile`` multiples, mirroring edge-shard
+    padding), plus the kernel the cost model picks for this regime."""
+    n_pairs = len(overlap_pairs(hg))
+    kernel, _ = select_intersect_kernel(hg)
+    for n_parts in DEVICE_SWEEP:
+        block = -(-n_pairs // (n_parts * tile)) * tile
+        pad = 1.0 - n_pairs / max(n_parts * block, 1)
+        row(
+            f"scaling/{regime}/p{n_parts}/pairs_per_shard",
+            float(block),
+            f"n_pairs={n_pairs};pad={pad:.3f};kernel={kernel}",
+        )
 
 
 def run() -> None:
     for regime, base_scale in [("orkut", 0.0004), ("friendster", 0.001),
                                ("dblp", 0.003), ("apache", 0.05)]:
         hg = make_dataset(regime, scale=base_scale * SCALE, seed=0)
-        for n_parts in (2, 4, 8, 16, 32, 64):
-            plan = partition("random_both_cut", hg, n_parts)
-            s = plan.stats
-            per_shard = plan.shard_len
-            backend, _ = select_backend(
-                plan, hg.n_vertices, hg.n_hyperedges
-            )
-            row(
-                f"scaling/{regime}/p{n_parts}/edges_per_shard",
-                float(per_shard),
-                f"vrep={s.vertex_replication:.2f};"
-                f"herep={s.hyperedge_replication:.2f};"
-                f"sync_bytes={s.sync_bytes_per_dim:.0f};"
-                f"pad={s.pad_fraction:.3f};"
-                f"auto_backend={backend}",
-            )
+        iterative_rows(regime, hg)
+        motif_rows(regime, hg)
 
 
 if __name__ == "__main__":

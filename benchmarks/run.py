@@ -16,6 +16,7 @@ def main() -> None:
         bench_representation,
         bench_roofline,
         bench_scaling,
+        bench_serving,
         bench_vs_specialized,
     )
 
@@ -27,6 +28,7 @@ def main() -> None:
         ("vs_specialized (Fig 15)", bench_vs_specialized.run),
         ("roofline (EXPERIMENTS §Roofline)", bench_roofline.run),
         ("motifs (batch analytics)", bench_motifs.run),
+        ("serving (compile-once serve-many)", bench_serving.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

@@ -22,7 +22,7 @@ from repro.algorithms.components import (
     connected_components_spec,
 )
 from repro.algorithms.graph_pagerank import graph_pagerank
-from repro.algorithms.spec import AlgorithmSpec, run_local, run_distributed
+from repro.algorithms.spec import AlgorithmSpec
 
 __all__ = [
     "pagerank",
@@ -41,6 +41,4 @@ __all__ = [
     "connected_components_spec",
     "graph_pagerank",
     "AlgorithmSpec",
-    "run_local",
-    "run_distributed",
 ]

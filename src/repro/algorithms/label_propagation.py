@@ -18,13 +18,14 @@ def label_propagation_spec(hg: HyperGraph, iters: int = 30) -> AlgorithmSpec:
         new_label = jnp.maximum(msg, attr)
         return ProcedureOut(attr=new_label, msg=new_label)
 
-    nv, ne = hg.n_vertices, hg.n_hyperedges
-    hg0 = hg.with_attrs(
-        v_attr=jnp.zeros((nv,), jnp.int32),
-        he_attr=jnp.zeros((ne,), jnp.int32),
-    )
+    def init(hg: HyperGraph) -> HyperGraph:
+        return hg.with_attrs(
+            v_attr=jnp.zeros((hg.n_vertices,), jnp.int32),
+            he_attr=jnp.zeros((hg.n_hyperedges,), jnp.int32),
+        )
+
     return AlgorithmSpec(
-        hg0=hg0,
+        hg0=init(hg),
         initial_msg=jnp.int32(0),
         v_program=Program(procedure=vertex, combiner="max"),
         he_program=Program(procedure=hyperedge, combiner="max"),
@@ -32,6 +33,7 @@ def label_propagation_spec(hg: HyperGraph, iters: int = 30) -> AlgorithmSpec:
         extract=lambda out: (out.v_attr, out.he_attr),
         name="label_propagation",
         touches_hyperedge_state=True,  # labels persist on hyperedges
+        init=init,
     )
 
 

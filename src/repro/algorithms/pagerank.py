@@ -46,12 +46,17 @@ def pagerank_spec(
         new_rank = msg * w
         return ProcedureOut(attr=new_rank, msg=(w, new_rank / card))
 
-    hg0 = hg.with_attrs(
-        v_attr=jnp.ones((nv,), jnp.float32),
-        he_attr=jnp.ones((ne,), jnp.float32),
-    )
+    def init(hg: HyperGraph) -> HyperGraph:
+        # NOTE for the compiled serve-many path: custom ``he_weight`` is
+        # traced in sized to THIS hypergraph; rebind on a new structure
+        # only with default (unit) weights.
+        return hg.with_attrs(
+            v_attr=jnp.ones((hg.n_vertices,), jnp.float32),
+            he_attr=jnp.ones((hg.n_hyperedges,), jnp.float32),
+        )
+
     return AlgorithmSpec(
-        hg0=hg0,
+        hg0=init(hg),
         initial_msg=(jnp.float32(1.0), jnp.float32(1.0)),
         v_program=Program(procedure=vertex, combiner="sum"),
         he_program=Program(procedure=hyperedge, combiner="sum"),
@@ -59,6 +64,7 @@ def pagerank_spec(
         extract=lambda out: (out.v_attr, out.he_attr),
         name="pagerank",
         touches_hyperedge_state=True,  # extracts hyperedge ranks
+        init=init,
     )
 
 

@@ -3,10 +3,18 @@
 One walk step: vertex -> uniformly-random incident hyperedge -> uniformly-
 random member vertex (Zhou et al.'s hypergraph walk).  Power iteration on
 that Markov chain with restart mass ``alpha`` at the seed distribution.
+
+The restart distribution rides in the vertex state (``v_attr = (p,
+restart)``) instead of a traced-in closure constant, which makes it the
+per-request axis: ``bind_query`` rebinds a one-hot restart at a seed
+vertex, so one ``Engine.compile`` serves personalized walks from any
+seed — ``run_batch`` over a seed batch is the personalized-PageRank
+serving pattern.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
@@ -19,50 +27,85 @@ def random_walk_spec(
     iters: int = 30,
     alpha: float = 0.15,
 ) -> AlgorithmSpec:
-    nv, ne = hg.n_vertices, hg.n_hyperedges
-    if seeds is None:
-        restart_full = jnp.full((nv,), 1.0 / nv, jnp.float32)
-    else:
-        restart_full = jnp.zeros((nv,), jnp.float32).at[seeds].set(
-            1.0 / seeds.shape[0]
-        )
-
     def vertex(step, ids, attr, msg, deg):
-        restart = jnp.take(restart_full, jnp.minimum(ids, nv - 1), axis=0)
+        p, restart = attr
         d = jnp.maximum(deg.astype(jnp.float32), 1.0)
         dangling = (deg == 0).astype(jnp.float32)
         # dangling vertices (no incident hyperedge) keep their mass in
         # place instead of leaking it — the walk stays a distribution.
-        p = jnp.where(
+        p_next = jnp.where(
             step == 0,
             restart,
-            (1.0 - alpha) * (msg + attr * dangling) + alpha * restart,
+            (1.0 - alpha) * (msg + p * dangling) + alpha * restart,
         )
-        return ProcedureOut(attr=p, msg=p / d * (1.0 - dangling))
+        return ProcedureOut(
+            attr=(p_next, restart), msg=p_next / d * (1.0 - dangling)
+        )
 
     def hyperedge(step, ids, attr, msg, card):
         c = jnp.maximum(card.astype(jnp.float32), 1.0)
         return ProcedureOut(attr=msg, msg=msg / c)
 
-    hg0 = hg.with_attrs(
-        v_attr=restart_full, he_attr=jnp.zeros((ne,), jnp.float32)
-    )
+    def init(hg: HyperGraph) -> HyperGraph:
+        # ``seeds`` live here (not just in hg0) so a compiled handle
+        # serving a NEW same-bucket hypergraph keeps the seeded restart
+        # instead of silently reverting to the uniform walk.
+        nv = hg.n_vertices
+        if seeds is None:
+            restart = jnp.full((nv,), 1.0 / max(nv, 1), jnp.float32)
+        else:
+            restart = jnp.zeros((nv,), jnp.float32).at[seeds].set(
+                1.0 / seeds.shape[0]
+            )
+        return hg.with_attrs(
+            v_attr=(restart, restart),
+            he_attr=jnp.zeros((hg.n_hyperedges,), jnp.float32),
+        )
+
+    def bind_query(hg0: HyperGraph, seed) -> HyperGraph:
+        """Personalize: all restart mass on one seed vertex."""
+        p, _ = hg0.v_attr
+        ids = jnp.arange(p.shape[0], dtype=jnp.int32)
+        restart = (ids == jnp.asarray(seed, jnp.int32)).astype(
+            jnp.float32
+        )
+        return hg0.with_attrs(v_attr=(restart, restart))
+
+    if seeds is not None:
+        seeds = jnp.asarray(seeds)
     return AlgorithmSpec(
-        hg0=hg0,
+        hg0=init(hg),
         initial_msg=jnp.float32(0.0),
         v_program=Program(procedure=vertex, combiner="sum"),
         he_program=Program(procedure=hyperedge, combiner="sum"),
         max_iters=iters,
-        extract=lambda out: out.v_attr,
+        extract=lambda out: out.v_attr[0],
         name="random_walk",
         # hyperedges only relay mass (attr never read across steps), but
         # the cardinality normalization has no clique equivalent:
         touches_hyperedge_state=True,
+        init=init,
+        bind_query=bind_query,
     )
 
 
-def random_walk(hg, seeds=None, iters=30, alpha=0.15, *, engine=None):
-    """Returns the stationary visit distribution over vertices."""
-    return resolve_engine(engine).run(
-        random_walk_spec(hg, seeds, iters, alpha)
-    ).value
+def random_walk(hg, seeds=None, iters=30, alpha=0.15, *, seed_batch=None,
+                engine=None):
+    """Returns the stationary visit distribution over vertices.
+
+    ``seed_batch``: optional batch of seed vertices — compiles once and
+    serves a personalized walk per seed via ``run_batch`` (the result
+    gains a leading batch axis; row b restarts at ``seed_batch[b]``).
+    """
+    eng = resolve_engine(engine)
+    if seed_batch is not None:
+        if seeds is not None:
+            raise ValueError(
+                "pass either seeds (one walk, arbitrary restart set) or "
+                "seed_batch (one personalized walk per seed), not both"
+            )
+        spec = random_walk_spec(hg, None, iters, alpha)
+        return eng.compile(spec).run_batch(
+            np.asarray(seed_batch, np.int32)
+        ).value
+    return eng.run(random_walk_spec(hg, seeds, iters, alpha)).value

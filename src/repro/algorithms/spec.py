@@ -6,13 +6,23 @@ any representation/partition/backend design point.  The property tests
 assert every design point agrees — the system's core correctness
 invariant.
 
-``run_local`` / ``run_distributed`` are the pre-facade entry points, kept
-as deprecated shims: they delegate to ``Engine`` and will be removed once
-nothing imports them.
+The compile-once/serve-many lifecycle (``Engine.compile`` ->
+``CompiledAlgorithm``) additionally needs algorithms to declare which
+parts of their state depend on the *input structure* and which vary *per
+request*:
+
+* ``init(hg)`` rebuilds the algorithm's initial attributes on a new
+  hypergraph — what the spec constructor did to produce ``hg0`` — so one
+  compiled executable can serve a stream of same-bucket hypergraphs.
+* ``bind_query(hg0, query)`` binds one request's varying state (an SSSP
+  source, a personalized-restart seed) onto an *initialized, unbound*
+  hypergraph.  It is traced into the executable, so the query is a
+  runtime argument: changing it never recompiles, and
+  ``CompiledAlgorithm.run_batch`` vmaps over it to serve B queries from
+  one compile.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Any, Callable, NamedTuple
 
 from repro.core.api import Program
@@ -31,6 +41,18 @@ class AlgorithmSpec(NamedTuple):
     * ``clique_program``: optional equivalent computation over the
       clique-expanded ``Graph`` (``repro.core.clique.to_graph``); required
       for the clique representation to be selectable.
+
+    Serving metadata (``Engine.compile``):
+
+    * ``init``: rebuild initial attributes on a fresh structure,
+      ``(hg) -> hg0_unbound``.  Required to run a compiled algorithm on
+      hypergraphs other than ``hg0``, and for any query rebinding.
+    * ``bind_query``: bind one request's varying state,
+      ``(hg0_unbound, query) -> hg0``.  Must be jit-traceable and
+      vmap-able over ``query`` (scalar/fixed-shape queries; structure
+      sizes come from the hypergraph argument, which may be padded).
+    * ``query0``: the query baked into ``hg0`` (for reports/defaults);
+      ``None`` when the spec is query-free or hg0 is unbound.
     """
 
     hg0: HyperGraph
@@ -42,6 +64,9 @@ class AlgorithmSpec(NamedTuple):
     name: str = "custom"
     touches_hyperedge_state: bool = True
     clique_program: Callable[..., Any] | None = None
+    init: Callable[[HyperGraph], HyperGraph] | None = None
+    bind_query: Callable[[HyperGraph, Any], HyperGraph] | None = None
+    query0: Any = None
 
 
 def resolve_engine(engine=None):
@@ -53,42 +78,3 @@ def resolve_engine(engine=None):
     from repro.core.executor import Engine
 
     return Engine()
-
-
-def run_local(spec: AlgorithmSpec):
-    """Deprecated: use ``Engine(backend='local').run(spec).value``."""
-    warnings.warn(
-        "run_local is deprecated; route through repro.core.Engine",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.core.executor import Engine
-
-    # Pin the legacy design point exactly: bipartite + local compute
-    # (representation='auto' could pick clique for eligible specs, which
-    # is a *different* numerical result).
-    return Engine(representation="bipartite", backend="local").run(
-        spec
-    ).value
-
-
-def run_distributed(
-    spec: AlgorithmSpec,
-    plan,
-    mesh,
-    *,
-    backend: str = "replicated",
-    axis: str = "data",
-):
-    """Deprecated: use ``Engine(plan=..., mesh=..., backend=...)``."""
-    warnings.warn(
-        "run_distributed is deprecated; route through repro.core.Engine",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    from repro.core.executor import Engine
-
-    return Engine(
-        plan=plan, mesh=mesh, representation="bipartite",
-        backend=backend, axis=axis,
-    ).run(spec).value

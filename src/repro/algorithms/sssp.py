@@ -3,10 +3,19 @@
 Distance unit = number of hyperedges traversed (vertex->he hop costs 1).
 Only updated entities broadcast (sparse activation); the engine halts the
 scan when every entity is inactive — the paper's termination condition.
+
+The *source* is the per-request axis: ``bind_query`` seeds distance 0 at
+the query vertex on an all-infinite initial state, and the step-0
+bootstrap activates every finite-distance vertex (equivalent to the
+classic "source activates itself" formulation, but source-independent in
+the traced program).  One ``Engine.compile`` therefore serves any source
+— and ``run_batch`` serves a whole batch of sources — with zero
+recompilation.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.api import Program, ProcedureOut
 from repro.core.hypergraph import HyperGraph
@@ -20,13 +29,16 @@ def shortest_paths_spec(
 ) -> AlgorithmSpec:
     def vertex(step, ids, attr, msg, deg):
         new_hop = msg
-        # Superstep 0: the source activates itself with distance 0
-        # (Pregel-style source bootstrap).
-        is_src_boot = (step == 0) & (ids == source)
-        new_hop = jnp.where(is_src_boot, 0.0, new_hop)
         updated = attr > new_hop
         attr2 = jnp.where(updated, new_hop, attr)
-        return ProcedureOut(attr=attr2, msg=attr2 + 1.0, active=updated)
+        # Superstep 0: every vertex with a finite seeded distance (the
+        # bound source) activates and broadcasts — Pregel-style source
+        # bootstrap, expressed over state so the program itself is
+        # source-independent (the source is a bindable query).
+        boot = (step == 0) & jnp.isfinite(attr2)
+        return ProcedureOut(
+            attr=attr2, msg=attr2 + 1.0, active=updated | boot
+        )
 
     def hyperedge(step, ids, attr, msg, card):
         new_hop = msg
@@ -34,13 +46,18 @@ def shortest_paths_spec(
         attr2 = jnp.where(updated, new_hop, attr)
         return ProcedureOut(attr=attr2, msg=attr2, active=updated)
 
-    nv, ne = hg.n_vertices, hg.n_hyperedges
-    hg0 = hg.with_attrs(
-        v_attr=jnp.full((nv,), INF),
-        he_attr=jnp.full((ne,), INF),
-    )
+    def init(hg: HyperGraph) -> HyperGraph:
+        return hg.with_attrs(
+            v_attr=jnp.full((hg.n_vertices,), INF),
+            he_attr=jnp.full((hg.n_hyperedges,), INF),
+        )
+
+    def bind_query(hg0: HyperGraph, source) -> HyperGraph:
+        src = jnp.asarray(source, jnp.int32)
+        return hg0.with_attrs(v_attr=hg0.v_attr.at[src].set(0.0))
+
     return AlgorithmSpec(
-        hg0=hg0,
+        hg0=bind_query(init(hg), source),
         initial_msg=INF,
         v_program=Program(procedure=vertex, combiner="min"),
         he_program=Program(procedure=hyperedge, combiner="min"),
@@ -48,11 +65,29 @@ def shortest_paths_spec(
         extract=lambda out: (out.v_attr, out.he_attr),
         name="sssp",
         touches_hyperedge_state=True,  # per-hyperedge distances persist
+        init=init,
+        bind_query=bind_query,
+        query0=int(source),
     )
 
 
-def shortest_paths(hg, source, max_iters=64, *, engine=None):
-    """Returns (vertex_hops, hyperedge_hops); unreachable = +inf."""
-    return resolve_engine(engine).run(
-        shortest_paths_spec(hg, source, max_iters)
-    ).value
+def shortest_paths(hg, source=0, max_iters=64, *, sources=None,
+                   engine=None):
+    """Returns (vertex_hops, hyperedge_hops); unreachable = +inf.
+
+    ``sources``: optional batch of source vertices — compiles the
+    algorithm once and serves every source through
+    ``CompiledAlgorithm.run_batch`` (results gain a leading batch axis).
+    """
+    eng = resolve_engine(engine)
+    if sources is not None:
+        if source != 0:
+            raise ValueError(
+                "pass either source (single query) or sources (batched "
+                "serve), not both"
+            )
+        spec = shortest_paths_spec(hg, 0, max_iters)
+        return eng.compile(spec).run_batch(
+            np.asarray(sources, np.int32)
+        ).value
+    return eng.run(shortest_paths_spec(hg, source, max_iters)).value

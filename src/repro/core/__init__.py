@@ -16,18 +16,25 @@ Module map — one API, many design points:
 * ``clique``      — the clique-expansion representation (``to_graph``,
   the paper's constant-folding optimization) and its feasibility
   estimator ``clique_expansion_size``.
-* ``executor``    — the ``Engine`` facade: the ONE entry point. Takes an
-  ``AlgorithmSpec`` plus an ``ExecutionConfig`` naming every design
-  choice (representation / partition strategy / backend / jit /
-  max-iters), resolves ``"auto"`` fields with small cost models
+* ``executor``    — the ``Engine`` facade: the ONE entry point.
+  ``Engine.submit`` dispatches on spec type: an ``AlgorithmSpec`` plus
+  an ``ExecutionConfig`` naming every design choice (representation /
+  partition strategy / backend / jit / max-iters) runs the iterative
+  supersteps; an ``AnalyticsSpec`` (h-motif census / pair
+  intersections, ``repro.motifs``) runs batch analytics over the same
+  axes — representation (materialize pair intersections via the dual
+  clique expansion vs derive from the incidence), intersection kernel
+  (bitset vs sorted-merge), backend (local vs pair blocks tiled across
+  the mesh).  ``"auto"`` fields resolve via small cost models
   (``select_representation``, ``select_backend``, ``select_partition``)
-  and reports the chosen design point on the returned ``Result``.
-  ``Engine.analyze`` is the batch twin: an ``AnalyticsSpec`` (h-motif
-  census / pair intersections, ``repro.motifs``) resolved over the
-  same axes — representation (materialize pair intersections via the
-  dual clique expansion vs derive from the incidence), intersection
-  kernel (bitset vs sorted-merge), backend (local vs pair blocks tiled
-  across the mesh).
+  and the chosen design point is reported on the returned ``Result``.
+* ``serving``     — compile-once serve-many: ``Engine.compile(spec)``
+  resolves the design point once and returns a ``CompiledAlgorithm``
+  whose ``run``/``run_batch`` execute with zero retracing for any
+  hypergraph in the same shape bucket (sizes quantized by
+  ``bucket_dim``; executables held in the Engine's LRU, inspectable via
+  ``Engine.cache_stats()``), vmapping over the spec's query axis to
+  serve whole request batches from one compile.
 
 Callers should construct an ``Engine`` (or use the algorithm wrappers'
 ``engine=`` parameter); ``compute`` / ``distributed_compute`` remain
@@ -47,10 +54,13 @@ from repro.core.executor import (
     select_partition,
     select_representation,
 )
+from repro.core.serving import CompiledAlgorithm, bucket_dim
 
 __all__ = [
     "AnalyticsResult",
     "AnalyticsSpec",
+    "CompiledAlgorithm",
+    "bucket_dim",
     "HyperGraph",
     "Program",
     "ProcedureOut",

@@ -47,14 +47,18 @@ def _pad_to(n: int, parts: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class DistContext:
-    """Static facts the distributed superstep needs."""
+    """Static facts the distributed superstep needs.
+
+    Real (unpadded) entity counts are NOT static: they flow through the
+    supersteps as traced int32 scalars so one compiled executable serves
+    every hypergraph in a shape bucket (activity stats and halting mask
+    padding slots dynamically).
+    """
 
     axis: str                  # mesh axis name carrying edge partitions
     n_parts: int
     nv_pad: int
     ne_pad: int
-    nv_real: int               # unpadded entity counts (activity stats
-    ne_real: int               # and halting ignore padding slots)
 
 
 def _local_combine(program: Program, rows, dst_ids, num_dst, live):
@@ -147,7 +151,7 @@ def _deliver_local(program, out_msg_full, active_full, src, dst, mask,
 
 def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
                           step, v_attr, he_attr, msg_to_v,
-                          src, dst, mask):
+                          src, dst, mask, nv_real, ne_real):
     v_program, he_program = programs
     v_deg, he_card = degs
     v_ids = jnp.arange(ctx.nv_pad, dtype=jnp.int32)
@@ -171,16 +175,18 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
     )
     msg_to_v_next = _cross_combine(he_program, partial_v, ctx.axis)
 
-    def count(active, n_real):
+    def count(active, n_pad, n_real):
         # Activity over *real* entities only: padding slots must not
         # leak into the observable stats (or the halting decision).
-        if active is None:
-            return jnp.asarray(n_real, jnp.int32)
-        return active[:n_real].sum().astype(jnp.int32)
+        # ``n_real`` may be traced, so mask instead of slicing.
+        live = jnp.arange(n_pad, dtype=jnp.int32) < n_real
+        if active is not None:
+            live = live & active
+        return live.sum().astype(jnp.int32)
 
     stats = (
-        count(v_out.active, ctx.nv_real),
-        count(he_out.active, ctx.ne_real),
+        count(v_out.active, ctx.nv_pad, nv_real),
+        count(he_out.active, ctx.ne_pad, ne_real),
     )
     return v_out.attr, he_out.attr, msg_to_v_next, stats
 
@@ -191,7 +197,7 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
 
 def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
                        step, v_attr_sh, he_attr_sh, msg_to_v_sh,
-                       src, dst, mask):
+                       src, dst, mask, nv_real, ne_real):
     """State arrays carry only this partition's id-range block
     (``[n/P, ...]``); ids are globalized with the axis index."""
     v_program, he_program = programs
@@ -260,8 +266,8 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
         return jax.lax.psum(local, ctx.axis)
 
     stats = (
-        count(v_out.active, v_ids, ctx.nv_real),
-        count(he_out.active, he_ids, ctx.ne_real),
+        count(v_out.active, v_ids, nv_real),
+        count(he_out.active, he_ids, ne_real),
     )
     return v_out.attr, he_out.attr, msg_to_v_next_sh, stats
 
@@ -276,6 +282,91 @@ def _pad_leading(x: jnp.ndarray, n_pad: int) -> jnp.ndarray:
         return x
     return jnp.concatenate(
         [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0
+    )
+
+
+def build_distributed_runner(
+    mesh: Mesh,
+    ctx: DistContext,
+    v_program: Program,
+    he_program: Program,
+    max_iters: int,
+    backend: str = "replicated",
+):
+    """Build the ``shard_map``-wrapped superstep scan for one design point.
+
+    Returns a traceable callable
+    ``(v_attr, he_attr, msg0, v_deg, he_card, shard_src, shard_dst,
+    shard_mask, nv_real, ne_real) -> (v_attr, he_attr, v_trace, he_trace)``
+    over bucket-padded full-size arrays (``[nv_pad, ...]`` state,
+    ``[n_parts, shard_len]`` edge shards).  ``nv_real`` / ``ne_real`` are
+    traced int32 scalars, so the same runner — and therefore the same
+    compiled executable — serves every hypergraph whose padded shapes
+    match (the ``Engine.compile`` serving path); ``distributed_compute``
+    is the eager single-shot wrapper.
+    """
+    if backend == "replicated":
+        state_spec = P()
+        superstep = _superstep_replicated
+    elif backend == "sharded":
+        state_spec = P(ctx.axis)
+        superstep = _superstep_sharded
+    else:
+        raise ValueError(backend)
+    deg_spec = state_spec
+    edge_spec = P(ctx.axis)  # leading dim = n_parts, one row per partition
+    programs = (v_program, he_program)
+
+    def run(v_attr, he_attr, msg0, v_deg, he_card, src, dst, mask,
+            nv_real, ne_real):
+        # shard_map gives each device its [1, shard_len] edge row; squeeze.
+        src, dst, mask = src[0], dst[0], mask[0]
+        degs_local = (v_deg, he_card)
+
+        def body(carry, _):
+            step, v_a, he_a, msg, halted = carry
+
+            def go(args):
+                step, v_a, he_a, msg = args
+                nv_a, nhe_a, nmsg, stats = superstep(
+                    ctx, None, programs, degs_local,
+                    step, v_a, he_a, msg, src, dst, mask,
+                    nv_real, ne_real,
+                )
+                v_act, he_act = stats
+                return nv_a, nhe_a, nmsg, (v_act + he_act) == 0, stats
+
+            def skip(args):
+                _, v_a, he_a, msg = args
+                zero = jnp.asarray(0, jnp.int32)
+                return v_a, he_a, msg, jnp.asarray(True), (zero, zero)
+
+            nv_a, nhe_a, nmsg, halted2, stats = jax.lax.cond(
+                halted, skip, go, (step, v_a, he_a, msg)
+            )
+            return (step + 2, nv_a, nhe_a, nmsg, halted | halted2), stats
+
+        init = (
+            jnp.asarray(0, jnp.int32), v_attr, he_attr, msg0,
+            jnp.asarray(False),
+        )
+        (_, v_a, he_a, _, _), (v_trace, he_trace) = jax.lax.scan(
+            body, init, None, length=max_iters
+        )
+        return v_a, he_a, v_trace, he_trace
+
+    # replication checking off: the halt flag is partition-uniform by
+    # construction, which 0.4.x check_rep cannot prove.  The activity
+    # traces are likewise partition-uniform (psum'd / computed on the
+    # replicated full-size buffers), so their out_spec is P().
+    return _shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(
+            state_spec, state_spec, state_spec, deg_spec, deg_spec,
+            edge_spec, edge_spec, edge_spec, P(), P(),
+        ),
+        out_specs=(state_spec, state_spec, P(), P()),
     )
 
 
@@ -312,7 +403,6 @@ def distributed_compute(
     ne_pad = _pad_to(hg.n_hyperedges, n_parts)
     ctx = DistContext(
         axis=axis, n_parts=n_parts, nv_pad=nv_pad, ne_pad=ne_pad,
-        nv_real=hg.n_vertices, ne_real=hg.n_hyperedges,
     )
 
     v_deg = _pad_leading(hg.degrees(), nv_pad)
@@ -325,76 +415,15 @@ def distributed_compute(
     shard_dst = jnp.asarray(plan.shard_dst)
     shard_mask = jnp.asarray(plan.shard_mask)
 
-    programs = (v_program, he_program)
-
-    if backend == "replicated":
-        state_spec = P()
-        deg_spec = P()
-        superstep = _superstep_replicated
-        degs = (v_deg, he_card)
-    elif backend == "sharded":
-        state_spec = P(axis)
-        deg_spec = P(axis)
-        superstep = _superstep_sharded
-        degs = (v_deg, he_card)
-    else:
-        raise ValueError(backend)
-
-    edge_spec = P(axis)  # leading dim = n_parts, one row per partition
-
-    def run(v_attr, he_attr, msg0, v_deg, he_card, src, dst, mask):
-        # shard_map gives each device its [1, shard_len] edge row; squeeze.
-        src, dst, mask = src[0], dst[0], mask[0]
-        degs_local = (v_deg, he_card)
-
-        def body(carry, _):
-            step, v_a, he_a, msg, halted = carry
-
-            def go(args):
-                step, v_a, he_a, msg = args
-                nv_a, nhe_a, nmsg, stats = superstep(
-                    ctx, None, programs, degs_local,
-                    step, v_a, he_a, msg, src, dst, mask,
-                )
-                v_act, he_act = stats
-                return nv_a, nhe_a, nmsg, (v_act + he_act) == 0, stats
-
-            def skip(args):
-                _, v_a, he_a, msg = args
-                zero = jnp.asarray(0, jnp.int32)
-                return v_a, he_a, msg, jnp.asarray(True), (zero, zero)
-
-            nv_a, nhe_a, nmsg, halted2, stats = jax.lax.cond(
-                halted, skip, go, (step, v_a, he_a, msg)
-            )
-            return (step + 2, nv_a, nhe_a, nmsg, halted | halted2), stats
-
-        init = (
-            jnp.asarray(0, jnp.int32), v_attr, he_attr, msg0,
-            jnp.asarray(False),
-        )
-        (_, v_a, he_a, _, _), (v_trace, he_trace) = jax.lax.scan(
-            body, init, None, length=max_iters
-        )
-        return v_a, he_a, v_trace, he_trace
-
-    # replication checking off: the halt flag is partition-uniform by
-    # construction, which 0.4.x check_rep cannot prove.  The activity
-    # traces are likewise partition-uniform (psum'd / computed on the
-    # replicated full-size buffers), so their out_spec is P().
-    mapped = _shard_map(
-        run,
-        mesh=mesh,
-        in_specs=(
-            state_spec, state_spec, state_spec, deg_spec, deg_spec,
-            edge_spec, edge_spec, edge_spec,
-        ),
-        out_specs=(state_spec, state_spec, P(), P()),
+    mapped = build_distributed_runner(
+        mesh, ctx, v_program, he_program, max_iters, backend=backend
     )
     with mesh:
         v_out, he_out, v_trace, he_trace = jax.jit(mapped)(
             v_attr, he_attr, msg0, v_deg, he_card,
             shard_src, shard_dst, shard_mask,
+            jnp.asarray(hg.n_vertices, jnp.int32),
+            jnp.asarray(hg.n_hyperedges, jnp.int32),
         )
     unpad_v = jax.tree.map(lambda x: x[: hg.n_vertices], v_out)
     unpad_he = jax.tree.map(lambda x: x[: hg.n_hyperedges], he_out)

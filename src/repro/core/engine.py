@@ -97,8 +97,17 @@ def superstep_pair(
     he_program: Program,
     v_deg: jnp.ndarray,
     he_card: jnp.ndarray,
+    n_real: tuple | None = None,
 ):
-    """One (vertex, hyperedge) pair of supersteps. Pure; jit/scan-safe."""
+    """One (vertex, hyperedge) pair of supersteps. Pure; jit/scan-safe.
+
+    ``n_real``: optional ``(nv_real, ne_real)`` — ints or traced int32
+    scalars.  When the hypergraph is padded to a shape bucket (the
+    compile-once serving path), activity counts mask to the first
+    ``n_real`` slots so padding entities never leak into the observable
+    stats or the halting decision; traced scalars keep one executable
+    serving every real size in the bucket.
+    """
     v_ids = jnp.arange(hg.n_vertices, dtype=jnp.int32)
     he_ids = jnp.arange(hg.n_hyperedges, dtype=jnp.int32)
 
@@ -121,14 +130,20 @@ def superstep_pair(
         he_program, hg.e_attr, hg.e_mask,
     )
 
-    def count(active, n):
-        if active is None:
-            return jnp.asarray(n, jnp.int32)
-        return active.sum().astype(jnp.int32)
+    def count(active, n, real):
+        if real is None:
+            if active is None:
+                return jnp.asarray(n, jnp.int32)
+            return active.sum().astype(jnp.int32)
+        live = jnp.arange(n, dtype=jnp.int32) < real
+        if active is not None:
+            live = live & active
+        return live.sum().astype(jnp.int32)
 
+    nv_real, ne_real = n_real if n_real is not None else (None, None)
     stats = SuperstepStats(
-        v_active=count(v_out.active, hg.n_vertices),
-        he_active=count(he_out.active, hg.n_hyperedges),
+        v_active=count(v_out.active, hg.n_vertices, nv_real),
+        he_active=count(he_out.active, hg.n_hyperedges, ne_real),
     )
     return v_out.attr, he_out.attr, msg_to_v_next, stats
 
@@ -141,6 +156,7 @@ def compute(
     he_program: Program,
     *,
     return_stats: bool = False,
+    n_real: tuple | None = None,
 ):
     """Run the alternating-superstep computation; returns the updated
     HyperGraph (and per-iteration activity stats when requested).
@@ -149,6 +165,9 @@ def compute(
     "iterations" (30 for its PageRank/LabelProp runs). Dynamic termination:
     once every entity reports inactive the remaining scan iterations are
     no-ops via ``lax.cond`` (compiled once, skipped cheaply at runtime).
+
+    ``n_real``: optional ``(nv_real, ne_real)`` for bucket-padded inputs
+    (see ``superstep_pair``); activity/halting then ignore padding slots.
     """
     v_deg = hg.degrees()
     he_card = hg.cardinalities()
@@ -161,7 +180,7 @@ def compute(
             step, v_attr, he_attr, msg_to_v = args
             nv_attr, nhe_attr, nmsg, stats = superstep_pair(
                 hg, step, v_attr, he_attr, msg_to_v,
-                v_program, he_program, v_deg, he_card,
+                v_program, he_program, v_deg, he_card, n_real,
             )
             now_halted = (stats.v_active + stats.he_active) == 0
             return (nv_attr, nhe_attr, nmsg, now_halted, stats)

@@ -3,10 +3,13 @@
 MESH's central claim (§IV) is that representation and partitioning are
 *pluggable design choices behind one simple API*, selected per data and
 application characteristics.  This module is that API: every algorithm,
-benchmark, example and launch script routes through ``Engine.run``; the
-representation (bipartite incidence vs clique expansion), partitioning
-strategy and execution backend (local / replicated / sharded) are named by
-an ``ExecutionConfig`` and — when left ``"auto"`` — chosen by small cost
+benchmark, example and launch script routes through ``Engine.submit``
+(dispatching ``AlgorithmSpec`` -> iterative ``run``, ``AnalyticsSpec``
+-> batch ``analyze``) or the compile-once serving path ``Engine.compile
+-> CompiledAlgorithm`` (``repro.core.serving``); the representation
+(bipartite incidence vs clique expansion), partitioning strategy and
+execution backend (local / replicated / sharded) are named by an
+``ExecutionConfig`` and — when left ``"auto"`` — chosen by small cost
 models over the machinery the repo already has:
 
 * clique vs bipartite: ``clique_expansion_size`` against the incidence
@@ -23,7 +26,8 @@ The chosen design point is reported on the returned ``Result`` so callers
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from collections import OrderedDict
+from typing import Any, Callable, Mapping
 
 import jax
 import numpy as np
@@ -119,8 +123,7 @@ class Result:
     """What an execution produced, plus the design point that produced it.
 
     Attributes:
-      value: the spec's extracted output (same value the legacy
-        ``run_local`` / ``run_distributed`` returned).
+      value: the spec's extracted output.
       config: the fully-resolved ``ExecutionConfig`` (no ``"auto"``).
       representation / backend: the chosen design point (convenience
         mirrors of ``config``).
@@ -376,6 +379,7 @@ class Engine:
         plan=None,
         mesh=None,
         config: ExecutionConfig | None = None,
+        exec_cache_size: int = 32,
         **overrides: Any,
     ):
         cfg = config if config is not None else ExecutionConfig()
@@ -388,6 +392,15 @@ class Engine:
         # run()/resolve() on the same hypergraph must not re-run the
         # full strategy sweep.  [(hg, n_parts, strategy, plan, why)]
         self._plan_cache: list = []
+        # Compile-once serve-many state: the LRU of shape-bucketed
+        # executables behind Engine.compile / CompiledAlgorithm (keyed
+        # by repro.core.serving.signature), plus the observability
+        # counters cache_stats() reports.
+        self.exec_cache_size = int(exec_cache_size)
+        self._exec_cache: OrderedDict = OrderedDict()
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._trace_count = 0
 
     # -- resolution ---------------------------------------------------------
 
@@ -627,6 +640,109 @@ class Engine:
             superstep_stats=stats,
             decision=decision,
         )
+
+    # -- compile-once serve-many --------------------------------------------
+
+    def compile(self, spec, **overrides: Any):
+        """Resolve the design point ONCE and return a ``CompiledAlgorithm``.
+
+        The serve-many half of the facade: the returned handle's
+        ``run(hg)`` executes with zero retracing for any hypergraph in
+        the same shape bucket (sizes padded to bounded power-of-two
+        buckets; executables cached in this Engine's LRU), and
+        ``run_batch(queries)`` vmaps over the spec's query axis
+        (``AlgorithmSpec.bind_query``) so one compile serves B requests.
+
+        >>> compiled = engine.compile(shortest_paths_spec(hg, 0))
+        >>> compiled.run_batch(np.arange(8))      # 8 sources, 1 compile
+        >>> engine.cache_stats()                   # hits/misses/traces
+
+        Compiled execution is always jitted and always bipartite (clique
+        constant-folding produces a host-side program with nothing to
+        cache); ``overrides`` are per-compile ``ExecutionConfig``
+        replacements, as for ``run``.
+        """
+        from repro.core.serving import CompiledAlgorithm
+
+        if isinstance(spec, AnalyticsSpec):
+            raise TypeError(
+                "Engine.compile serves iterative AlgorithmSpecs; batch "
+                "analytics runs one-shot through Engine.analyze/submit"
+            )
+        probe = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        if probe.representation == "clique":
+            raise ValueError(
+                "Engine.compile serves the bipartite representation only: "
+                "the clique path runs a host-side clique_program with no "
+                "executable to cache; use Engine.run for one-shot clique "
+                "execution"
+            )
+        overrides = {**overrides, "representation": "bipartite"}
+        resolved, plan, decision = self.resolve(spec, **overrides)
+        return CompiledAlgorithm(
+            engine=self,
+            spec=spec,
+            config=resolved,
+            decision=decision,
+            _plan0=plan,
+        )
+
+    def submit(self, spec, **overrides: Any):
+        """THE unified entry point: dispatch on spec type.
+
+        ``AlgorithmSpec`` -> iterative superstep execution (``run``),
+        ``AnalyticsSpec`` -> batch analytics (``analyze``).  ``run`` and
+        ``analyze`` remain as thin, typed sugar over this dispatch.
+        """
+        if isinstance(spec, AnalyticsSpec):
+            return self.analyze(spec, **overrides)
+        from repro.algorithms.spec import AlgorithmSpec
+
+        if isinstance(spec, AlgorithmSpec):
+            return self.run(spec, **overrides)
+        raise TypeError(
+            "Engine.submit takes an AlgorithmSpec or AnalyticsSpec, got "
+            f"{type(spec).__name__}"
+        )
+
+    def cache_stats(self) -> dict:
+        """Executable-cache observability: benchmarks assert amortization.
+
+        ``traces`` counts actual executable tracings (a retrace with a
+        warm cache is a bug the serving tests assert against);
+        ``hits``/``misses`` count ``CompiledAlgorithm`` lookups in this
+        Engine's LRU.
+        """
+        return {
+            "entries": len(self._exec_cache),
+            "capacity": self.exec_cache_size,
+            "hits": self._cache_hits,
+            "misses": self._cache_misses,
+            "traces": self._trace_count,
+        }
+
+    def _note_trace(self) -> None:
+        """Side-effecting trace probe: runs only while jax traces an
+        executable body, so the counter exposes real retraces."""
+        self._trace_count += 1
+
+    def _executable_for(self, key, build: Callable[[], Any]):
+        """LRU lookup of a compiled executable by shape signature."""
+        cache = self._exec_cache
+        if key in cache:
+            cache.move_to_end(key)
+            self._cache_hits += 1
+            return cache[key]
+        self._cache_misses += 1
+        exe = build()
+        cache[key] = exe
+        while len(cache) > self.exec_cache_size:
+            cache.popitem(last=False)
+        return exe
 
     # -- batch analytics -----------------------------------------------------
 

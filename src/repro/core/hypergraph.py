@@ -163,6 +163,10 @@ class HyperGraph:
         src = np.asarray(self.src)
         dst = np.asarray(self.dst)
         keep = np.ones(len(src), dtype=bool)
+        if self.e_mask is not None:
+            # Padding incidences (mask 0) are dead: they must not be
+            # resurrected as live rows of the sub-hypergraph.
+            keep &= np.asarray(self.e_mask) != 0
         if v_pred is not None:
             keep &= np.asarray(v_pred)[src]
         if he_pred is not None:
@@ -177,6 +181,55 @@ class HyperGraph:
             e_mask=None,
         )
         return sub
+
+    def padded(
+        self, nv_pad: int, ne_pad: int, nnz_pad: int
+    ) -> "HyperGraph":
+        """Pad structure and attributes to the given bucket dims.
+
+        Padding incidences carry ``e_mask=0`` (they reduce to the
+        combiner identity in ``deliver``) and reference entity 0; padded
+        entity slots are zero-filled and unreachable (no live incidence
+        touches them), so real results are unchanged and callers slice
+        outputs back to the real counts.  The mask is ALWAYS materialized
+        — even when ``nnz_pad == nnz`` — so every hypergraph in a shape
+        bucket presents the identical pytree structure to jit.
+        """
+        if (nv_pad < self.n_vertices or ne_pad < self.n_hyperedges
+                or nnz_pad < self.nnz):
+            raise ValueError(
+                f"padded dims ({nv_pad}, {ne_pad}, {nnz_pad}) must cover "
+                f"({self.n_vertices}, {self.n_hyperedges}, {self.nnz})"
+            )
+        def pad_rows(x, n):
+            x = jnp.asarray(x)
+            if n == x.shape[0]:
+                return x
+            return jnp.concatenate(
+                [x, jnp.zeros((n - x.shape[0],) + x.shape[1:], x.dtype)]
+            )
+
+        mask = (
+            jnp.asarray(self.e_mask, jnp.float32)
+            if self.e_mask is not None
+            else jnp.ones((self.nnz,), jnp.float32)
+        )
+        return HyperGraph(
+            src=pad_rows(self.src, nnz_pad),
+            dst=pad_rows(self.dst, nnz_pad),
+            n_vertices=nv_pad,
+            n_hyperedges=ne_pad,
+            v_attr=jax.tree.map(
+                lambda a: pad_rows(a, nv_pad), self.v_attr
+            ),
+            he_attr=jax.tree.map(
+                lambda a: pad_rows(a, ne_pad), self.he_attr
+            ),
+            e_attr=jax.tree.map(
+                lambda a: pad_rows(a, nnz_pad), self.e_attr
+            ),
+            e_mask=pad_rows(mask, nnz_pad),
+        )
 
     def sorted_by_dst(self) -> "HyperGraph":
         """Return an equivalent hypergraph with incidences sorted by

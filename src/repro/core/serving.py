@@ -1,0 +1,505 @@
+"""Compile-once serve-many: shape-bucketed executables for ``Engine.compile``.
+
+``Engine.run`` re-resolves the design point and re-traces on every call —
+fine for one-shot analytics, fatal for serving millions of per-source
+queries (SSSP sources, personalized-restart seeds) against one partitioned
+hypergraph.  This module is the serving half of the facade:
+
+* ``bucket_dim`` quantizes ``n_vertices`` / ``n_hyperedges`` / ``nnz``
+  (and batch sizes) to power-of-two buckets, so a stream of
+  slightly-varying hypergraphs maps onto a bounded set of padded shapes;
+* ``signature`` canonicalizes (programs, design point, bucket dims,
+  attribute dtypes, query structure, batch bucket) into the hashable key
+  of the Engine's LRU executable cache;
+* ``CompiledAlgorithm`` is the serve-many handle ``Engine.compile``
+  returns: ``run(hg, query=...)`` executes with zero retracing for any
+  same-bucket hypergraph, and ``run_batch(queries)`` vmaps the whole
+  executable over the spec's query axis so one compile serves B requests.
+
+Real (unpadded) sizes flow through the executables as *traced* int32
+scalars — activity stats and the halting decision mask padding slots
+dynamically (``repro.core.engine.compute(n_real=...)``,
+``repro.core.distributed.build_distributed_runner``), so results are
+bitwise identical to an unpadded run while shapes stay bucket-stable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import constant_initial_msg
+from repro.core.engine import compute
+from repro.core.hypergraph import HyperGraph
+
+Pytree = Any
+
+# Smallest entity/incidence bucket: graphs below this all share one shape.
+BUCKET_FLOOR = 64
+# Batch-size buckets start lower — single-digit batches are common.
+BATCH_FLOOR = 8
+
+
+def bucket_dim(n: int, floor: int = BUCKET_FLOOR) -> int:
+    """Smallest power-of-two ≥ ``n`` (and ≥ ``floor``).
+
+    Bounded buckets are the compile-amortization contract: padded work
+    grows at most 2x, while the number of distinct executables a
+    workload can touch is O(log max_size).
+    """
+    b = int(floor)
+    n = int(n)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-int(n) // int(mult)) * int(mult)
+
+
+def _attr_sig(tree: Pytree):
+    """Hashable (treedef, per-leaf dtype + trailing shape): the leading
+    entity dim is the bucket's business, dtype/feature-shape changes must
+    miss the cache."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (
+        treedef,
+        tuple(
+            (jnp.asarray(leaf).dtype.name, tuple(jnp.shape(leaf)[1:]))
+            for leaf in leaves
+        ),
+    )
+
+
+def _query_sig(query: Pytree):
+    """Hashable full dtype/shape structure of one (unbatched) query."""
+    if query is None:
+        return None
+    leaves, treedef = jax.tree.flatten(query)
+    return (
+        treedef,
+        tuple(
+            (jnp.asarray(leaf).dtype.name, tuple(jnp.shape(leaf)))
+            for leaf in leaves
+        ),
+    )
+
+
+def _canon_query(query: Pytree) -> Pytree:
+    """Strong-typed device arrays: python ints must produce the same
+    signature (and no weak-type retrace) as explicit numpy scalars."""
+    return jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), query)
+
+
+def _initial_msg_sig(initial_msg: Pytree):
+    """Hashable VALUE signature of a spec's initial message.
+
+    Unlike the programs (keyed by identity), ``initial_msg`` can be
+    swapped via ``spec._replace`` without changing any function object —
+    and it is baked into the executable as a traced constant, so its
+    concrete bytes must participate in the cache key."""
+    leaves, treedef = jax.tree.flatten(initial_msg)
+    return (
+        treedef,
+        tuple(
+            (arr.dtype.name, arr.shape, arr.tobytes())
+            for arr in (np.asarray(leaf) for leaf in leaves)
+        ),
+    )
+
+
+def signature(
+    spec,
+    cfg,
+    *,
+    nv_pad: int,
+    ne_pad: int,
+    nnz_pad: int,
+    shard_len_pad: int,
+    n_parts: int,
+    v_attr_sig,
+    he_attr_sig,
+    e_attr_sig,
+    query_sig,
+    batch_pad: int | None,
+):
+    """The executable cache key.
+
+    Program objects participate by identity (their closures bake in
+    algorithm constants), so distinct specs never collide; everything
+    else is the padded-shape/dtype/design-point signature the tentpole
+    names: same bucket + same design point = same executable.
+    """
+    return (
+        spec.v_program,
+        spec.he_program,
+        spec.bind_query if query_sig is not None else None,
+        _initial_msg_sig(spec.initial_msg),
+        cfg.backend,
+        cfg.axis,
+        cfg.max_iters,
+        cfg.collect_stats,
+        n_parts,
+        nv_pad,
+        ne_pad,
+        nnz_pad,
+        shard_len_pad,
+        v_attr_sig,
+        he_attr_sig,
+        e_attr_sig,
+        query_sig,
+        batch_pad,
+    )
+
+
+# --------------------------------------------------------------------------
+# executable builders
+# --------------------------------------------------------------------------
+
+def _build_local_executable(spec, cfg, has_query, batch_pad, trace_hook):
+    """One jitted callable ``(hgp, nv_real, ne_real, query) ->
+    (v_attr, he_attr, stats)`` over a bucket-padded hypergraph."""
+    # Close over only what the trace needs — NOT the whole spec, whose
+    # hg0 (full structure + attrs) would otherwise stay pinned in the
+    # Engine's executable LRU for the cache entry's lifetime.
+    v_program, he_program = spec.v_program, spec.he_program
+    initial_msg, bind_query = spec.initial_msg, spec.bind_query
+    max_iters, collect_stats = cfg.max_iters, cfg.collect_stats
+
+    def raw(hgp: HyperGraph, nv_real, ne_real, query):
+        trace_hook()
+        if has_query:
+            hgp = bind_query(hgp, query)
+        out = compute(
+            hgp,
+            max_iters=max_iters,
+            initial_msg=initial_msg,
+            v_program=v_program,
+            he_program=he_program,
+            return_stats=collect_stats,
+            n_real=(nv_real, ne_real),
+        )
+        stats = None
+        if collect_stats:
+            out, stats = out
+        return out.v_attr, out.he_attr, stats
+
+    fn = raw
+    if batch_pad is not None:
+        fn = jax.vmap(raw, in_axes=(None, None, None, 0))
+    return jax.jit(fn)
+
+
+def _build_distributed_executable(
+    spec, cfg, mesh, n_parts, nv_pad, ne_pad, has_query, batch_pad,
+    trace_hook,
+):
+    """Same contract as the local builder, plus the plan's padded edge
+    shards: ``(hgp, shard_src, shard_dst, shard_mask, nv_real, ne_real,
+    query) -> (v_attr, he_attr, stats)``.  Query binding happens on the
+    full padded state *before* ``shard_map`` shards it, so one runner
+    serves both backends' layouts."""
+    from repro.core.distributed import DistContext, build_distributed_runner
+
+    ctx = DistContext(
+        axis=cfg.axis, n_parts=n_parts, nv_pad=nv_pad, ne_pad=ne_pad
+    )
+    mapped = build_distributed_runner(
+        mesh, ctx, spec.v_program, spec.he_program, cfg.max_iters,
+        backend=cfg.backend,
+    )
+    # As in the local builder: keep the spec's hg0 out of the closure.
+    initial_msg, bind_query = spec.initial_msg, spec.bind_query
+    collect_stats = cfg.collect_stats
+
+    def raw(hgp: HyperGraph, s_src, s_dst, s_mask, nv_real, ne_real,
+            query):
+        trace_hook()
+        if has_query:
+            hgp = bind_query(hgp, query)
+        msg0 = constant_initial_msg(initial_msg, nv_pad)
+        v_out, he_out, v_trace, he_trace = mapped(
+            hgp.v_attr, hgp.he_attr, msg0,
+            hgp.degrees(), hgp.cardinalities(),
+            s_src, s_dst, s_mask, nv_real, ne_real,
+        )
+        stats = (v_trace, he_trace) if collect_stats else None
+        return v_out, he_out, stats
+
+    fn = raw
+    if batch_pad is not None:
+        fn = jax.vmap(raw, in_axes=(None, None, None, None, None, None, 0))
+    return jax.jit(fn)
+
+
+def _pad_shards(plan, shard_len_pad: int):
+    """Zero-pad a plan's ``[n_parts, shard_len]`` edge shards out to the
+    bucketed shard length (padding lanes carry mask 0)."""
+    pad = shard_len_pad - plan.shard_len
+    if pad == 0:
+        return (
+            jnp.asarray(plan.shard_src),
+            jnp.asarray(plan.shard_dst),
+            jnp.asarray(plan.shard_mask),
+        )
+
+    def padded(x):
+        return jnp.asarray(
+            np.pad(x, ((0, 0), (0, pad)))
+        )
+
+    return (
+        padded(plan.shard_src), padded(plan.shard_dst),
+        padded(plan.shard_mask),
+    )
+
+
+# --------------------------------------------------------------------------
+# the serve-many handle
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledAlgorithm:
+    """What ``Engine.compile`` returns: a design point resolved once,
+    served many times.
+
+    >>> compiled = engine.compile(shortest_paths_spec(hg, 0))
+    >>> compiled.run()                         # hg0, baked-in source
+    >>> compiled.run(query=7)                  # same executable, source 7
+    >>> compiled.run_batch(np.arange(64))      # one vmapped executable
+    >>> compiled.run(other_hg)                 # zero retrace if same bucket
+
+    Executables live in the owning Engine's LRU cache keyed by
+    ``serving.signature`` — a second same-bucket hypergraph (or a second
+    ``compile`` of the same spec) is a cache hit with zero retracing;
+    dtype, bucket, or design-point changes miss and compile fresh.
+    ``Engine.cache_stats()`` exposes hits/misses/entries/traces so
+    benchmarks can assert amortization.
+    """
+
+    engine: Any
+    spec: Any
+    config: Any                       # fully-resolved ExecutionConfig
+    decision: dict
+    _plan0: Any = None                # compile-time plan (hg0's structure)
+    # Warm-path memo: (source_hg identity, rebind) -> padded state, so a
+    # serve loop over one hypergraph pays init + padding once, not per
+    # request.  Keyed by object identity like the Engine's plan cache
+    # (hypergraphs are treated as immutable); bounded to the last few.
+    _pad_cache: list = dataclasses.field(default_factory=list)
+
+    # -- public API --------------------------------------------------------
+
+    def run(self, hg: HyperGraph | None = None, query: Any = None):
+        """Execute on ``hg`` (default: the spec's own hypergraph).
+
+        ``query`` rebinds the spec's per-request state (requires
+        ``spec.bind_query``); ``hg`` may be any hypergraph the spec's
+        ``init`` can re-initialize — same shape bucket = zero retraces.
+        When no query is given but the spec declares one (``query0``),
+        the default query is bound through the same traced path, so
+        querying and non-querying calls share one executable.
+        """
+        spec = self.spec
+        if (query is None and spec.bind_query is not None
+                and spec.init is not None and spec.query0 is not None):
+            query = spec.query0
+        prep = self._prepared(hg, rebind=query is not None)
+        q = _canon_query(query) if query is not None else None
+        return self._execute(prep, q, batch=None)
+
+    def run_batch(self, queries: Any, hg: HyperGraph | None = None):
+        """Serve a batch: vmap the executable over the spec's query axis.
+
+        ``queries`` is a query pytree with a leading batch dim B (for
+        scalar queries: an array of B values).  Returns one ``Result``
+        whose value/stats carry a leading B axis, bitwise equal to B
+        sequential ``run(query=...)`` calls.  The batch dim is bucketed
+        (queries repeat-padded, results sliced back), so varying B hits
+        a bounded set of executables.
+        """
+        if self.spec.bind_query is None:
+            raise ValueError(
+                f"spec {self.spec.name!r} has no bind_query: declare the "
+                "per-request axis to serve batched queries"
+            )
+        prep = self._prepared(hg, rebind=True)
+        queries = _canon_query(queries)
+        sizes = {int(jnp.shape(leaf)[0]) for leaf in jax.tree.leaves(queries)}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"query leaves disagree on batch size: {sorted(sizes)}"
+            )
+        b = sizes.pop()
+        b_pad = bucket_dim(b, floor=BATCH_FLOOR)
+        # Repeat-pad with the last query: always a *valid* request, and
+        # the padded rows are sliced off the results.
+        queries_p = jax.tree.map(
+            lambda leaf: jnp.concatenate(
+                [leaf] + [leaf[-1:]] * (b_pad - b)
+            ) if b_pad > b else leaf,
+            queries,
+        )
+        return self._execute(prep, queries_p, batch=(b, b_pad))
+
+    # -- internals ---------------------------------------------------------
+
+    def _base_state(self, hg, *, rebind: bool):
+        """(initialized state, structure-identity object for plan cache).
+
+        ``rebind=True`` re-initializes even the spec's own hypergraph so
+        ``bind_query`` starts from unbound state (hg0 already carries
+        ``query0``)."""
+        spec = self.spec
+        if hg is None and not rebind:
+            return spec.hg0, spec.hg0
+        if spec.init is None:
+            raise ValueError(
+                f"spec {self.spec.name!r} has no init: cannot "
+                + ("rebind queries" if hg is None else
+                   "re-initialize a new hypergraph")
+            )
+        source = spec.hg0 if hg is None else hg
+        return spec.init(source), source
+
+    def _prepared(self, hg, *, rebind: bool):
+        """Initialized + bucket-padded inputs for one source hypergraph,
+        memoized by (hypergraph identity, rebind): the warm serve loop
+        pays init/padding/plan lookup once, not per request."""
+        source_probe = self.spec.hg0 if hg is None else hg
+        for s, r, prep in self._pad_cache:
+            if s is source_probe and r == rebind:
+                return prep
+
+        base, source_hg = self._base_state(hg, rebind=rebind)
+        cfg = self.config
+        nv, ne, nnz = base.n_vertices, base.n_hyperedges, base.nnz
+        nv_pad, ne_pad = bucket_dim(nv), bucket_dim(ne)
+        nnz_pad = bucket_dim(nnz)
+        plan = None
+        shards = None
+        shard_len_pad = 0
+        n_parts = 0
+        if cfg.backend != "local":
+            plan = self._plan_for(source_hg)
+            n_parts = plan.n_parts
+            nv_pad = _round_up(nv_pad, n_parts)
+            ne_pad = _round_up(ne_pad, n_parts)
+            shard_len_pad = bucket_dim(plan.shard_len)
+            shards = _pad_shards(plan, shard_len_pad)
+        hgp = base.padded(nv_pad, ne_pad, nnz_pad)
+        prep = dict(
+            base=base,
+            nv=nv, ne=ne,
+            nv_pad=nv_pad, ne_pad=ne_pad, nnz_pad=nnz_pad,
+            plan=plan, n_parts=n_parts, shard_len_pad=shard_len_pad,
+            shards=shards, hgp=hgp,
+            attr_sigs=(
+                _attr_sig(hgp.v_attr), _attr_sig(hgp.he_attr),
+                _attr_sig(hgp.e_attr),
+            ),
+        )
+        self._pad_cache.append((source_probe, rebind, prep))
+        del self._pad_cache[:-4]  # bound the strong refs we hold
+        return prep
+
+    def _plan_for(self, source_hg):
+        if self.config.backend == "local":
+            return None
+        if source_hg is self.spec.hg0 and self._plan0 is not None:
+            return self._plan0
+        plan, _ = self.engine._cached_plan(
+            source_hg, self.config.n_parts, self.config.partition_strategy
+        )
+        return plan
+
+    def _execute(self, prep: dict, query, batch):
+        from repro.core.executor import Result
+
+        cfg = self.config
+        spec = self.spec
+        engine = self.engine
+        distributed = cfg.backend != "local"
+        has_query = query is not None
+        b, b_pad = batch if batch is not None else (None, None)
+
+        base, hgp, plan = prep["base"], prep["hgp"], prep["plan"]
+        nv, ne = prep["nv"], prep["ne"]
+        v_sig, he_sig, e_sig = prep["attr_sigs"]
+        one_query = (
+            jax.tree.map(lambda leaf: leaf[0], query)
+            if batch is not None and has_query
+            else query
+        )
+        key = signature(
+            spec, cfg,
+            nv_pad=prep["nv_pad"], ne_pad=prep["ne_pad"],
+            nnz_pad=prep["nnz_pad"],
+            shard_len_pad=prep["shard_len_pad"], n_parts=prep["n_parts"],
+            v_attr_sig=v_sig, he_attr_sig=he_sig, e_attr_sig=e_sig,
+            query_sig=_query_sig(one_query),
+            batch_pad=b_pad,
+        )
+
+        if distributed:
+            exe = engine._executable_for(
+                key,
+                lambda: _build_distributed_executable(
+                    spec, cfg, engine.mesh, prep["n_parts"],
+                    prep["nv_pad"], prep["ne_pad"],
+                    has_query, b_pad, engine._note_trace,
+                ),
+            )
+            s_src, s_dst, s_mask = prep["shards"]
+            with engine.mesh:
+                v_attr, he_attr, stats = exe(
+                    hgp, s_src, s_dst, s_mask,
+                    jnp.asarray(nv, jnp.int32),
+                    jnp.asarray(ne, jnp.int32),
+                    query,
+                )
+        else:
+            exe = engine._executable_for(
+                key,
+                lambda: _build_local_executable(
+                    spec, cfg, has_query, b_pad, engine._note_trace,
+                ),
+            )
+            v_attr, he_attr, stats = exe(
+                hgp,
+                jnp.asarray(nv, jnp.int32),
+                jnp.asarray(ne, jnp.int32),
+                query,
+            )
+
+        # Slice padding (and batch padding) back off; extract on a
+        # real-size hypergraph whose attrs may carry a leading batch dim
+        # (extracts are field accessors, shape-polymorphic over it).
+        if batch is not None:
+            unslice_v = lambda x: x[:b, :nv]
+            unslice_he = lambda x: x[:b, :ne]
+            stats = (
+                jax.tree.map(lambda x: x[:b], stats)
+                if stats is not None else None
+            )
+        else:
+            unslice_v = lambda x: x[:nv]
+            unslice_he = lambda x: x[:ne]
+        out = base.with_attrs(
+            v_attr=jax.tree.map(unslice_v, v_attr),
+            he_attr=jax.tree.map(unslice_he, he_attr),
+        )
+        return Result(
+            value=spec.extract(out),
+            config=cfg,
+            representation=cfg.representation,
+            backend=cfg.backend,
+            partition=plan.name if plan is not None else None,
+            partition_stats=plan.stats if plan is not None else None,
+            superstep_stats=stats,
+            decision=self.decision,
+        )

@@ -14,12 +14,20 @@ Usage:
       --algorithm motifs --regime dblp --scale 0.003 \
       --mode auto --kernel auto --devices 4
 
+  # compile-once serve-many (Engine.compile -> run_batch): 64 SSSP
+  # sources against one compiled executable
+  PYTHONPATH=src python -m repro.launch.hypergraph \
+      --algorithm sssp --regime dblp --scale 0.003 --batch 64
+  PYTHONPATH=src python -m repro.launch.hypergraph \
+      --algorithm random_walk --sources 3,17,99
+
 The device-count env fix must run before any jax import, hence the
 module-level XLA_FLAGS block (same pattern as ``dryrun``).
 """
 import argparse
 import os
 import sys
+import time
 
 
 def _parse(argv=None):
@@ -52,6 +60,13 @@ def _parse(argv=None):
     ap.add_argument("--kernel", default="auto",
                     choices=["auto", "bitset", "merge"],
                     help="motifs only: intersection kernel path")
+    ap.add_argument("--sources", default=None,
+                    help="comma-separated query vertices (sssp sources / "
+                         "random_walk seeds): compile once, serve the "
+                         "batch via CompiledAlgorithm.run_batch")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="serve N random query vertices through one "
+                         "compiled executable (see --sources)")
     return ap.parse_args(argv)
 
 
@@ -138,6 +153,44 @@ def main(argv=None) -> int:
         return 0
 
     spec = build_spec(args.algorithm, hg, args.iters)
+
+    if args.sources is not None or args.batch is not None:
+        # compile-once serve-many: one executable, B queries.
+        if spec.bind_query is None:
+            print(f"--sources/--batch need a query-capable algorithm "
+                  f"(sssp, random_walk); {args.algorithm} has no query "
+                  f"axis", file=sys.stderr)
+            return 2
+        if args.sources is not None:
+            queries = np.asarray(
+                [int(s) for s in args.sources.split(",")], np.int32
+            )
+        else:
+            rng = np.random.default_rng(args.seed)
+            queries = rng.integers(
+                0, hg.n_vertices, size=args.batch
+            ).astype(np.int32)
+        compiled = engine.compile(spec)
+        t0 = time.perf_counter()
+        res = compiled.run_batch(queries)
+        jax.block_until_ready(res.value)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = compiled.run_batch(queries)
+        jax.block_until_ready(res.value)
+        warm_s = time.perf_counter() - t0
+        print(f"design point: representation={res.representation} "
+              f"backend={res.backend} partition={res.partition}")
+        print(f"served {len(queries)} queries: cold {cold_s:.3f}s "
+              f"({len(queries) / cold_s:.1f} q/s incl. compile), warm "
+              f"{warm_s:.3f}s ({len(queries) / warm_s:.1f} q/s)")
+        print(f"cache: {engine.cache_stats()}")
+        leaves = jax.tree.leaves(res.value)
+        first = np.asarray(leaves[0])
+        for i, q in enumerate(queries[:4]):
+            print(f"  query {int(q):4d}: {first[i].ravel()[:5]}")
+        return 0
+
     res = engine.run(spec)
 
     print(f"design point: representation={res.representation} "

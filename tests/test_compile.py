@@ -1,0 +1,369 @@
+"""Compile-once serve-many: the executable cache and batched execution.
+
+The tentpole contracts, asserted:
+
+* ``Engine.compile(spec).run(hg)`` equals ``Engine.run(spec)`` exactly
+  (padding to a shape bucket must be invisible in results AND stats);
+* a second hypergraph in the same shape bucket is served by the cached
+  executable with ZERO retracing (trace-counter assertion);
+* dtype / design-point changes miss the cache (new executable);
+* ``run_batch`` over 8 SSSP sources agrees bitwise with 8 sequential
+  runs — in-process on the local backend, and in a forced-host-device
+  subprocess on the sharded/replicated backends.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    label_propagation_spec,
+    pagerank_spec,
+    random_walk_spec,
+    shortest_paths_spec,
+)
+from repro.core import Engine, bucket_dim
+from repro.data import powerlaw_hypergraph
+
+
+def same_bucket_pair(nv=47, ne=33, nv2=52, ne2=36):
+    """Two structurally different hypergraphs landing in one shape
+    bucket (nv/ne/nnz all quantize identically)."""
+    hg = powerlaw_hypergraph(nv, ne, mean_cardinality=4, seed=0)
+    want = (bucket_dim(nv), bucket_dim(ne), bucket_dim(hg.nnz))
+    for seed in range(1, 60):
+        hg2 = powerlaw_hypergraph(nv2, ne2, mean_cardinality=4, seed=seed)
+        got = (bucket_dim(nv2), bucket_dim(ne2), bucket_dim(hg2.nnz))
+        if got == want:
+            return hg, hg2
+    raise AssertionError("no same-bucket draw found (adjust sizes)")
+
+
+# --------------------------------------------------------------------------
+# compiled == run
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_spec", [
+    lambda hg: pagerank_spec(hg, iters=6),
+    lambda hg: shortest_paths_spec(hg, 0, 12),
+    lambda hg: label_propagation_spec(hg, iters=6),
+])
+def test_compiled_run_matches_engine_run(make_spec):
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    spec = make_spec(hg)
+    eng = Engine()
+    ref = eng.run(spec).value
+    got = eng.compile(spec).run().value
+    for a, b in zip(ref, got):
+        assert np.array_equal(
+            np.asarray(a), np.asarray(b), equal_nan=True
+        )
+
+
+def test_compiled_stats_mask_bucket_padding():
+    """Padding entities must not leak into activity stats: the compiled
+    (padded) pagerank reports exactly n_vertices active, not the bucket
+    size."""
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    assert bucket_dim(hg.n_vertices) > hg.n_vertices  # padding exists
+    eng = Engine(collect_stats=True)
+    spec = pagerank_spec(hg, iters=4)
+    ref = eng.run(spec)
+    got = eng.compile(spec).run()
+    for r, g in zip(ref.superstep_stats, got.superstep_stats):
+        assert np.array_equal(np.asarray(r), np.asarray(g))
+    assert int(np.asarray(got.superstep_stats[0])[0]) == hg.n_vertices
+
+
+# --------------------------------------------------------------------------
+# the executable cache: hits, zero retraces, misses
+# --------------------------------------------------------------------------
+
+def test_same_bucket_second_hypergraph_zero_retraces():
+    hg, hg2 = same_bucket_pair()
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 12))
+    compiled.run()
+    stats = eng.cache_stats()
+    assert stats["misses"] == 1 and stats["traces"] == 1
+
+    # same bucket, different structure: cache hit, NO retrace
+    before = eng.cache_stats()["traces"]
+    got = compiled.run(hg2).value
+    after = eng.cache_stats()
+    assert after["traces"] == before, "same-bucket serve retraced"
+    assert after["hits"] >= 1
+
+    # ... and the served result is exactly a fresh run on hg2
+    ref = eng.run(shortest_paths_spec(hg2, 0, 12)).value
+    for a, b in zip(ref, got):
+        assert np.array_equal(
+            np.asarray(a), np.asarray(b), equal_nan=True
+        )
+
+
+def test_second_compile_of_same_spec_hits_cache():
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    eng = Engine()
+    spec = shortest_paths_spec(hg, 0, 12)
+    eng.compile(spec).run()
+    assert eng.cache_stats()["misses"] == 1
+    eng.compile(spec).run()  # same programs, same bucket -> hit
+    stats = eng.cache_stats()
+    assert stats["misses"] == 1 and stats["hits"] == 1
+    assert stats["traces"] == 1
+
+
+def test_query_change_never_recompiles():
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 12))
+    for s in (0, 3, 11, 46):
+        compiled.run(query=s)
+    assert eng.cache_stats()["traces"] == 1
+
+
+def test_dtype_change_misses():
+    """Same bucket, different attribute dtype -> different executable."""
+    import dataclasses
+
+    hg, hg2 = same_bucket_pair()
+    hg = dataclasses.replace(
+        hg, e_attr=jnp.ones((hg.nnz,), jnp.float32)
+    )
+    # hg2 carries an int32 incidence attribute instead of float32
+    hg2 = dataclasses.replace(
+        hg2, e_attr=jnp.ones((hg2.nnz,), jnp.int32)
+    )
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 8))
+    compiled.run()
+    compiled.run(hg2)
+    stats = eng.cache_stats()
+    assert stats["misses"] == 2 and stats["traces"] == 2
+
+
+def test_initial_msg_change_misses():
+    """Regression: initial_msg is baked into the executable as a traced
+    constant, so swapping it via _replace must MISS the cache (the
+    programs' identities don't change)."""
+    hg = powerlaw_hypergraph(30, 20, mean_cardinality=3, seed=0)
+    eng = Engine()
+    spec = shortest_paths_spec(hg, 0, 8)
+    ref = eng.compile(spec).run().value
+    spec2 = spec._replace(initial_msg=jnp.float32(0.0))
+    got = eng.compile(spec2).run().value
+    assert eng.cache_stats()["misses"] == 2
+    # 0-distance initial messages collapse every distance to 0 — results
+    # must reflect the NEW spec, not the cached executable's constants.
+    assert not np.array_equal(
+        np.asarray(ref[0]), np.asarray(got[0]), equal_nan=True
+    )
+    assert float(np.asarray(got[0]).max()) == 0.0
+
+
+def test_seeded_random_walk_serves_new_hypergraph():
+    """Regression: a seeded spec's restart set must survive
+    re-initialization on a second hypergraph (it once silently reverted
+    to the uniform walk)."""
+    hg, hg2 = same_bucket_pair()
+    eng = Engine()
+    seeds = jnp.asarray([3, 7])
+    compiled = eng.compile(random_walk_spec(hg, seeds=seeds, iters=8))
+    got = compiled.run(hg2).value
+    ref = eng.run(random_walk_spec(hg2, seeds=seeds, iters=8)).value
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_design_point_change_misses():
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    eng = Engine()
+    spec = shortest_paths_spec(hg, 0, 12)
+    eng.compile(spec).run()
+    eng.compile(spec, max_iters=6).run()        # different design point
+    eng.compile(spec, collect_stats=True).run()
+    stats = eng.cache_stats()
+    assert stats["misses"] == 3 and stats["entries"] == 3
+
+
+def test_cache_is_lru_bounded():
+    hg = powerlaw_hypergraph(30, 20, mean_cardinality=3, seed=0)
+    eng = Engine(exec_cache_size=2)
+    for iters in (2, 3, 4):
+        eng.compile(shortest_paths_spec(hg, 0, iters)).run()
+    stats = eng.cache_stats()
+    assert stats["entries"] == 2 and stats["misses"] == 3
+
+
+def test_compile_rejects_clique_and_analytics():
+    from repro.core import AnalyticsSpec
+    from repro.algorithms import vertex_pagerank_spec
+
+    hg = powerlaw_hypergraph(20, 12, seed=0)
+    with pytest.raises(ValueError, match="bipartite"):
+        Engine(representation="clique").compile(
+            vertex_pagerank_spec(hg, iters=2)
+        )
+    with pytest.raises(TypeError, match="AlgorithmSpec"):
+        Engine().compile(AnalyticsSpec(hg))
+
+
+# --------------------------------------------------------------------------
+# batched multi-query execution (local backend; sharded in subprocess)
+# --------------------------------------------------------------------------
+
+def test_run_batch_matches_sequential_local():
+    """8 SSSP sources through one vmapped executable == 8 sequential
+    runs, bitwise."""
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 16))
+    sources = np.arange(8, dtype=np.int32)
+    vb, heb = compiled.run_batch(sources).value
+    assert vb.shape == (8, hg.n_vertices)
+    assert heb.shape == (8, hg.n_hyperedges)
+    for i, s in enumerate(sources):
+        ref = eng.run(shortest_paths_spec(hg, int(s), 16)).value
+        assert np.array_equal(
+            np.asarray(ref[0]), np.asarray(vb[i]), equal_nan=True
+        )
+        assert np.array_equal(
+            np.asarray(ref[1]), np.asarray(heb[i]), equal_nan=True
+        )
+
+
+def test_run_batch_bucket_shares_executable_across_batch_sizes():
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 8))
+    compiled.run_batch(np.arange(8, dtype=np.int32))
+    before = eng.cache_stats()["traces"]
+    out = compiled.run_batch(np.arange(5, dtype=np.int32)).value
+    assert eng.cache_stats()["traces"] == before  # B=5 pads into B=8
+    assert out[0].shape == (5, hg.n_vertices)
+
+
+def test_run_batch_personalized_random_walk():
+    """Batched seeds == per-seed specs (personalized restart)."""
+    hg = powerlaw_hypergraph(40, 28, mean_cardinality=4, seed=2)
+    eng = Engine()
+    seeds = np.asarray([3, 17, 29], np.int32)
+    batch = eng.compile(random_walk_spec(hg, iters=12)).run_batch(
+        seeds
+    ).value
+    for i, s in enumerate(seeds):
+        ref = eng.run(
+            random_walk_spec(hg, seeds=jnp.asarray([s]), iters=12)
+        ).value
+        np.testing.assert_array_equal(
+            np.asarray(ref), np.asarray(batch[i])
+        )
+
+
+def test_run_batch_requires_query_axis():
+    hg = powerlaw_hypergraph(20, 12, seed=0)
+    compiled = Engine().compile(pagerank_spec(hg, iters=2))
+    with pytest.raises(ValueError, match="bind_query"):
+        compiled.run_batch(np.arange(4))
+
+
+def test_every_builtin_spec_serves_new_hypergraphs():
+    """Regression: every iterative spec declares init, so a compiled
+    handle can re-initialize a second hypergraph (label_propagation
+    once forgot to wire its init in)."""
+    hg, hg2 = same_bucket_pair()
+    eng = Engine()
+    for make in (pagerank_spec, label_propagation_spec,
+                 lambda h, iters: random_walk_spec(h, iters=iters),
+                 lambda h, iters: shortest_paths_spec(h, 0, iters)):
+        spec = make(hg, 4)
+        ref = eng.run(make(hg2, 4)).value
+        got = eng.compile(spec).run(hg2).value
+        for a, b in zip(
+            ref if isinstance(ref, tuple) else (ref,),
+            got if isinstance(got, tuple) else (got,),
+        ):
+            assert np.array_equal(
+                np.asarray(a), np.asarray(b), equal_nan=True
+            ), make
+
+
+def test_wrapper_query_argument_conflicts_raise():
+    from repro.algorithms import random_walk, shortest_paths
+
+    hg = powerlaw_hypergraph(20, 12, seed=0)
+    with pytest.raises(ValueError, match="not both"):
+        shortest_paths(hg, source=3, sources=[1, 2])
+    with pytest.raises(ValueError, match="not both"):
+        random_walk(hg, seeds=jnp.asarray([1]), seed_batch=[1, 2])
+
+
+# --------------------------------------------------------------------------
+# sharded/replicated serving (subprocess: needs forced host devices)
+# --------------------------------------------------------------------------
+
+SHARDED_SERVING = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import Engine, bucket_dim
+    from repro.data import powerlaw_hypergraph
+    from repro.algorithms import shortest_paths_spec
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4), ('data',))
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    sources = np.arange(8, dtype=np.int32)
+
+    for backend in ('replicated', 'sharded'):
+        eng = Engine(mesh=mesh, backend=backend)
+        spec = shortest_paths_spec(hg, 0, 12)
+        compiled = eng.compile(spec)
+        vb, heb = compiled.run_batch(sources).value
+        # batched == sequential, bitwise, against the LOCAL engine
+        local = Engine()
+        for i, s in enumerate(sources):
+            ref = local.run(shortest_paths_spec(hg, int(s), 12)).value
+            assert np.array_equal(np.asarray(ref[0]), np.asarray(vb[i]),
+                                  equal_nan=True), (backend, i)
+            assert np.array_equal(np.asarray(ref[1]), np.asarray(heb[i]),
+                                  equal_nan=True), (backend, i)
+        # same-bucket second hypergraph: zero retraces on the
+        # distributed executable (plan rebuilt host-side, shapes cached)
+        want = (bucket_dim(hg.n_vertices), bucket_dim(hg.n_hyperedges),
+                bucket_dim(hg.nnz))
+        hg2 = None
+        for seed in range(1, 60):
+            cand = powerlaw_hypergraph(52, 36, mean_cardinality=4,
+                                       seed=seed)
+            got = (bucket_dim(52), bucket_dim(36), bucket_dim(cand.nnz))
+            if got == want:
+                hg2 = cand
+                break
+        assert hg2 is not None
+        before = eng.cache_stats()['traces']
+        out2 = compiled.run_batch(sources, hg=hg2).value
+        assert eng.cache_stats()['traces'] == before, (
+            backend, 'same-bucket retrace')
+        ref2 = local.run(shortest_paths_spec(hg2, 0, 12)).value
+        assert np.array_equal(np.asarray(ref2[0]), np.asarray(out2[0][0]),
+                              equal_nan=True), (backend, 'hg2')
+    print('SERVING_AGREES')
+""")
+
+
+def test_distributed_serving_subprocess():
+    # Inherit the full environment (dropping JAX_PLATFORMS makes jax
+    # probe for accelerator platforms — minutes of stall per child).
+    proc = subprocess.run(
+        [sys.executable, "-c", SHARDED_SERVING],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SERVING_AGREES" in proc.stdout

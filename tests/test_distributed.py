@@ -12,11 +12,12 @@ SCRIPT = textwrap.dedent("""
     os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
     import jax, numpy as np
     from jax.sharding import Mesh
+    from repro.core import Engine
     from repro.data import make_dataset
     from repro.partition import partition, STRATEGIES
     from repro.algorithms import (pagerank_spec, pagerank_entropy_spec,
         label_propagation_spec, shortest_paths_spec, random_walk_spec,
-        connected_components_spec, run_local, run_distributed)
+        connected_components_spec)
 
     mesh = Mesh(np.array(jax.devices()).reshape(8), ('data',))
     hg = make_dataset('apache', scale=0.04, seed=3)
@@ -34,9 +35,12 @@ SCRIPT = textwrap.dedent("""
         kw = {'chunk': 32} if 'greedy' in strat else {}
         plan = partition(strat, hg, 8, **kw)
         for name, spec in specs.items():
-            ref = run_local(spec)
+            ref = Engine(representation='bipartite',
+                         backend='local').run(spec).value
             for backend in ['replicated', 'sharded']:
-                got = run_distributed(spec, plan, mesh, backend=backend)
+                got = Engine(plan=plan, mesh=mesh,
+                             representation='bipartite',
+                             backend=backend).run(spec).value
                 ok = jax.tree.all(jax.tree.map(
                     lambda a, b: np.allclose(np.asarray(a), np.asarray(b),
                                              rtol=1e-5, atol=1e-5,

@@ -3,9 +3,10 @@
 Three layers of coverage:
 
 * in-process properties (hypothesis): the facade's local backend equals
-  the legacy entry points, config resolution reports the chosen design
-  point, representation auto-selection enforces the paper's
-  constant-folding precondition;
+  the raw single-device engine (``compute``), config resolution reports
+  the chosen design point, representation auto-selection enforces the
+  paper's constant-folding precondition, ``submit`` dispatches on spec
+  type;
 * the backend cost model (``select_backend``) picks ``sharded`` when the
   plan's projected sync volume beats full replication and ``replicated``
   when the cut replicates everything anyway — pure decisions, no mesh;
@@ -19,7 +20,6 @@ import os
 import subprocess
 import sys
 import textwrap
-import warnings
 
 import numpy as np
 import pytest
@@ -34,6 +34,7 @@ from repro.algorithms.graph_pagerank import graph_pagerank
 from repro.core import (
     Engine,
     ExecutionConfig,
+    compute,
     select_backend,
     select_representation,
     to_graph,
@@ -55,19 +56,27 @@ def small_hypergraph(draw):
 
 
 # --------------------------------------------------------------------------
-# local backend == legacy entry points (facade plumbing)
+# local backend == the raw single-device engine (facade plumbing)
 # --------------------------------------------------------------------------
 
+def _raw_compute(spec):
+    """The pre-facade execution: ``compute`` + the spec's extract."""
+    out = compute(
+        spec.hg0,
+        max_iters=spec.max_iters,
+        initial_msg=spec.initial_msg,
+        v_program=spec.v_program,
+        he_program=spec.he_program,
+    )
+    return spec.extract(out)
+
+
 @given(small_hypergraph(), st.integers(2, 8))
-def test_engine_local_matches_legacy_run_local(hg, iters):
+def test_engine_local_matches_raw_compute(hg, iters):
     spec = pagerank_spec(hg, iters=iters)
     res = Engine(backend="local").run(spec)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        from repro.algorithms import run_local
-
-        legacy = run_local(spec)
-    for a, b in zip(res.value, legacy):
+    raw = _raw_compute(spec)
+    for a, b in zip(res.value, raw):
         assert np.array_equal(np.asarray(a), np.asarray(b))
     assert res.backend == "local"
     assert res.representation == "bipartite"
@@ -82,12 +91,26 @@ def test_engine_jit_matches_eager(hg):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_legacy_entry_points_warn():
-    hg = powerlaw_hypergraph(10, 6, seed=0)
-    from repro.algorithms import run_local
+def test_legacy_entry_points_removed():
+    """PR-1 migration is finished: the deprecated shims are gone."""
+    with pytest.raises(ImportError):
+        from repro.algorithms import run_local  # noqa: F401
+    with pytest.raises(ImportError):
+        from repro.algorithms import run_distributed  # noqa: F401
 
-    with pytest.warns(DeprecationWarning):
-        run_local(pagerank_spec(hg, iters=2))
+
+def test_submit_dispatches_on_spec_type():
+    """Engine.submit is THE entry point: AlgorithmSpec -> iterative run,
+    AnalyticsSpec -> batch analytics, anything else -> TypeError."""
+    from repro.core import AnalyticsSpec
+
+    hg = powerlaw_hypergraph(20, 12, seed=1)
+    run_res = Engine().submit(pagerank_spec(hg, iters=3))
+    assert run_res.backend == "local"
+    ana_res = Engine().submit(AnalyticsSpec(hg))
+    assert ana_res.kernel in ("bitset", "merge")
+    with pytest.raises(TypeError, match="AlgorithmSpec or AnalyticsSpec"):
+        Engine().submit(hg)
 
 
 # --------------------------------------------------------------------------
@@ -156,21 +179,19 @@ def test_auto_picks_clique_when_cheap_and_legal():
     )
 
 
-def test_legacy_shim_pins_bipartite_for_clique_eligible_specs():
-    """run_local must reproduce the legacy (bipartite compute) numbers
-    even for specs the auto-selector would constant-fold."""
+def test_explicit_bipartite_pins_raw_compute_numbers():
+    """representation='bipartite' must reproduce the raw bipartite
+    ``compute`` numbers even for specs the auto-selector would
+    constant-fold (clique is a *different* design point numerically)."""
     from repro.core import HyperGraph
-    from repro.algorithms import run_local
 
     hg = HyperGraph.from_hyperedge_lists(
         [[0, 1], [0, 1, 2, 3], [0, 3, 4], [2, 3]], n_vertices=5
     )
     spec = vertex_pagerank_spec(hg, iters=10)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = run_local(spec)
+    raw = _raw_compute(spec)
     bipartite = Engine(representation="bipartite").run(spec).value
-    assert np.array_equal(np.asarray(legacy), np.asarray(bipartite))
+    assert np.array_equal(np.asarray(raw), np.asarray(bipartite))
 
 
 def test_explicit_requests_beat_clique_auto_selection():

@@ -82,6 +82,25 @@ def test_sub_hypergraph(fig1):
     sub.validate()
 
 
+def test_sub_hypergraph_drops_masked_incidences(fig1):
+    """Regression: padding incidences (e_mask 0) must not be resurrected
+    as live rows of the sub-hypergraph."""
+    import dataclasses
+
+    mask = np.ones(fig1.nnz, np.float32)
+    mask[2] = 0.0  # kill one real incidence
+    masked = dataclasses.replace(fig1, e_mask=jnp.asarray(mask))
+    sub = masked.sub_hypergraph(
+        v_pred=np.ones(fig1.n_vertices, bool)
+    )
+    assert sub.nnz == fig1.nnz - 1  # dead row stays dead
+    sub.validate()
+    # degrees computed from the sub-hypergraph match the masked original
+    np.testing.assert_array_equal(
+        np.asarray(sub.degrees()), np.asarray(masked.degrees())
+    )
+
+
 def test_dataset_generator_regimes():
     hg = make_dataset("orkut", scale=0.001, seed=0)
     assert hg.n_hyperedges > hg.n_vertices  # E >> V regime preserved
