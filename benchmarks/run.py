@@ -10,6 +10,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_delivery,
         bench_loc,
         bench_motifs,
         bench_partitioning,
@@ -29,6 +30,7 @@ def main() -> None:
         ("roofline (EXPERIMENTS §Roofline)", bench_roofline.run),
         ("motifs (batch analytics)", bench_motifs.run),
         ("serving (compile-once serve-many)", bench_serving.run),
+        ("delivery (fused superstep data path)", bench_delivery.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

@@ -131,9 +131,20 @@ def _cross_combine_scatter(program: Program, partials, axis: str,
 
 
 def _deliver_local(program, out_msg_full, active_full, src, dst, mask,
-                   num_dst):
+                   num_dst, layout=None):
     """gather -> transform -> mask -> local segment combine, over one
-    partition's padded edge shard."""
+    partition's padded edge shard.
+
+    ``layout``: optional per-shard ``DeliveryLayout`` — routes the
+    monoid path through the fused delivery kernel (dst-sorted CSR over
+    THIS shard's edges; the shard mask is folded into the layout), same
+    as the local engine's ``delivery='pallas_fused'`` design point.
+    """
+    if (layout is not None and program.reducer is None
+            and program.edge_transform is None):
+        from repro.kernels.deliver import fused_deliver
+
+        return fused_deliver(out_msg_full, active_full, layout, program)
     rows = jax.tree.map(
         lambda leaf: jnp.take(leaf, src, axis=0), out_msg_full
     )
@@ -151,9 +162,11 @@ def _deliver_local(program, out_msg_full, active_full, src, dst, mask,
 
 def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
                           step, v_attr, he_attr, msg_to_v,
-                          src, dst, mask, nv_real, ne_real):
+                          src, dst, mask, nv_real, ne_real,
+                          delivery=(None, None)):
     v_program, he_program = programs
     v_deg, he_card = degs
+    fwd_layout, bwd_layout = delivery
     v_ids = jnp.arange(ctx.nv_pad, dtype=jnp.int32)
     he_ids = jnp.arange(ctx.ne_pad, dtype=jnp.int32)
 
@@ -162,7 +175,8 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
         v_attr, ctx.nv_pad,
     )
     partial_he = _deliver_local(
-        v_program, v_out.msg, v_out.active, src, dst, mask, ctx.ne_pad
+        v_program, v_out.msg, v_out.active, src, dst, mask, ctx.ne_pad,
+        layout=fwd_layout,
     )
     msg_to_he = _cross_combine(v_program, partial_he, ctx.axis)
 
@@ -171,7 +185,8 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
         he_attr, ctx.ne_pad,
     )
     partial_v = _deliver_local(
-        he_program, he_out.msg, he_out.active, dst, src, mask, ctx.nv_pad
+        he_program, he_out.msg, he_out.active, dst, src, mask, ctx.nv_pad,
+        layout=bwd_layout,
     )
     msg_to_v_next = _cross_combine(he_program, partial_v, ctx.axis)
 
@@ -197,11 +212,13 @@ def _superstep_replicated(ctx: DistContext, hg_meta, programs, degs,
 
 def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
                        step, v_attr_sh, he_attr_sh, msg_to_v_sh,
-                       src, dst, mask, nv_real, ne_real):
+                       src, dst, mask, nv_real, ne_real,
+                       delivery=(None, None)):
     """State arrays carry only this partition's id-range block
     (``[n/P, ...]``); ids are globalized with the axis index."""
     v_program, he_program = programs
     v_deg_sh, he_card_sh = degs
+    fwd_layout, bwd_layout = delivery
     p = jax.lax.axis_index(ctx.axis)
     v_block = ctx.nv_pad // ctx.n_parts
     he_block = ctx.ne_pad // ctx.n_parts
@@ -226,7 +243,8 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
         else None
     )
     partial_he = _deliver_local(
-        v_program, v_msg_full, v_act_full, src, dst, mask, ctx.ne_pad
+        v_program, v_msg_full, v_act_full, src, dst, mask, ctx.ne_pad,
+        layout=fwd_layout,
     )
     msg_to_he_sh = _cross_combine_scatter(
         v_program, partial_he, ctx.axis, ctx.n_parts
@@ -250,7 +268,8 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
         else None
     )
     partial_v = _deliver_local(
-        he_program, he_msg_full, he_act_full, dst, src, mask, ctx.nv_pad
+        he_program, he_msg_full, he_act_full, dst, src, mask, ctx.nv_pad,
+        layout=bwd_layout,
     )
     msg_to_v_next_sh = _cross_combine_scatter(
         he_program, partial_v, ctx.axis, ctx.n_parts
@@ -270,6 +289,86 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
         count(he_out.active, he_ids, ne_real),
     )
     return v_out.attr, he_out.attr, msg_to_v_next_sh, stats
+
+
+# --------------------------------------------------------------------------
+# fused-delivery shard layouts
+# --------------------------------------------------------------------------
+
+def _stack_layouts(layouts):
+    """Stack per-partition ``DeliveryLayout``s along a new leading axis
+    (the shard_map operand form).  Callers guarantee uniform shapes
+    (same k / remainder pad / tile geometry); ``max_blocks`` — a static
+    grid extent — takes the max so one kernel serves every shard."""
+    from repro.kernels.deliver import DeliveryLayout
+
+    ref = layouts[0]
+    stack = lambda get: jnp.stack([get(l) for l in layouts])
+    return DeliveryLayout(
+        sorted_src=stack(lambda l: l.sorted_src),
+        sorted_dst=stack(lambda l: l.sorted_dst),
+        ell_idx=stack(lambda l: l.ell_idx),
+        rem_src=stack(lambda l: l.rem_src),
+        rem_dst=stack(lambda l: l.rem_dst),
+        tile_bounds=stack(lambda l: l.tile_bounds),
+        n_src=ref.n_src,
+        n_dst=ref.n_dst,
+        nnz=ref.nnz,
+        block_n=ref.block_n,
+        block_e=ref.block_e,
+        max_blocks=max(l.max_blocks for l in layouts),
+    )
+
+
+def build_shard_delivery(shard_src, shard_dst, shard_mask,
+                         nv_pad: int, ne_pad: int):
+    """Per-shard fused-delivery layouts for both half-superstep
+    directions, over a plan's ``[n_parts, shard_len]`` edge shards.
+
+    Each shard gets its own dst-sorted CSR/ELL layout over the *full*
+    padded entity range (both backends combine into full-size buffers
+    before their cross-partition collective).  The data-dependent
+    shapes (ELL width, remainder pad) are harmonized across shards from
+    the per-shard live-degree histograms — cheap bincounts, no throwaway
+    layout build — so the layouts stack into one shard_map operand.
+    """
+    from repro.kernels.deliver import build_delivery_layout, plan_ell_width
+    from repro.kernels.deliver.layout import _PAD_FLOOR, _pow2_at_least
+
+    shard_src = np.asarray(shard_src)
+    shard_dst = np.asarray(shard_dst)
+    shard_mask = np.asarray(shard_mask)
+    n_parts = shard_src.shape[0]
+
+    def direction(srcs, dsts, n_src, n_dst):
+        live = shard_mask != 0
+        degs = [
+            np.bincount(dsts[p][live[p]], minlength=max(n_dst, 1))
+            for p in range(n_parts)
+        ]
+        k = max(
+            plan_ell_width(degs[p], int(live[p].sum()))[0]
+            for p in range(n_parts)
+        )
+        rem_pad = _pow2_at_least(
+            max(
+                max(int(np.maximum(d - k, 0).sum()) for d in degs), 1
+            ),
+            _PAD_FLOOR,
+        )
+        final = [
+            build_delivery_layout(
+                srcs[p], dsts[p], shard_mask[p], n_src, n_dst,
+                k=k, rem_pad_to=rem_pad,
+            )
+            for p in range(n_parts)
+        ]
+        return _stack_layouts(final)
+
+    return (
+        direction(shard_src, shard_dst, nv_pad, ne_pad),
+        direction(shard_dst, shard_src, ne_pad, nv_pad),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -297,13 +396,18 @@ def build_distributed_runner(
 
     Returns a traceable callable
     ``(v_attr, he_attr, msg0, v_deg, he_card, shard_src, shard_dst,
-    shard_mask, nv_real, ne_real) -> (v_attr, he_attr, v_trace, he_trace)``
-    over bucket-padded full-size arrays (``[nv_pad, ...]`` state,
-    ``[n_parts, shard_len]`` edge shards).  ``nv_real`` / ``ne_real`` are
-    traced int32 scalars, so the same runner — and therefore the same
-    compiled executable — serves every hypergraph whose padded shapes
-    match (the ``Engine.compile`` serving path); ``distributed_compute``
-    is the eager single-shot wrapper.
+    shard_mask, nv_real, ne_real, delivery) -> (v_attr, he_attr,
+    v_trace, he_trace)`` over bucket-padded full-size arrays
+    (``[nv_pad, ...]`` state, ``[n_parts, shard_len]`` edge shards).
+    ``nv_real`` / ``ne_real`` are traced int32 scalars, so the same
+    runner — and therefore the same compiled executable — serves every
+    hypergraph whose padded shapes match (the ``Engine.compile`` serving
+    path); ``distributed_compute`` is the eager single-shot wrapper.
+
+    ``delivery``: ``None`` (reference path) or the
+    ``build_shard_delivery`` pair of stacked per-shard layouts — the
+    fused delivery design point, identical on both backends (each
+    partition's local combine runs fused over its own edge block).
     """
     if backend == "replicated":
         state_spec = P()
@@ -318,9 +422,14 @@ def build_distributed_runner(
     programs = (v_program, he_program)
 
     def run(v_attr, he_attr, msg0, v_deg, he_card, src, dst, mask,
-            nv_real, ne_real):
+            nv_real, ne_real, delivery):
         # shard_map gives each device its [1, shard_len] edge row; squeeze.
         src, dst, mask = src[0], dst[0], mask[0]
+        delivery_local = (
+            jax.tree.map(lambda a: a[0], delivery)
+            if delivery is not None
+            else (None, None)
+        )
         degs_local = (v_deg, he_card)
 
         def body(carry, _):
@@ -331,7 +440,7 @@ def build_distributed_runner(
                 nv_a, nhe_a, nmsg, stats = superstep(
                     ctx, None, programs, degs_local,
                     step, v_a, he_a, msg, src, dst, mask,
-                    nv_real, ne_real,
+                    nv_real, ne_real, delivery_local,
                 )
                 v_act, he_act = stats
                 return nv_a, nhe_a, nmsg, (v_act + he_act) == 0, stats
@@ -365,6 +474,7 @@ def build_distributed_runner(
         in_specs=(
             state_spec, state_spec, state_spec, deg_spec, deg_spec,
             edge_spec, edge_spec, edge_spec, P(), P(),
+            edge_spec,  # delivery layouts: tree prefix, [n_parts, ...]
         ),
         out_specs=(state_spec, state_spec, P(), P()),
     )
@@ -383,6 +493,7 @@ def distributed_compute(
     backend: str = "replicated",
     feature_axis: str | None = None,
     return_stats: bool = False,
+    delivery: str = "xla",
 ) -> HyperGraph:
     """Run ``compute`` distributed over ``mesh[axis]`` per ``plan``.
 
@@ -393,6 +504,10 @@ def distributed_compute(
     activity traces (int32, length ``max_iters``) — the scan trace
     threaded out through ``shard_map`` as replicated outputs, matching
     the local engine's ``return_stats`` bit for bit.
+
+    ``delivery``: ``'xla'`` (reference) or ``'pallas_fused'`` — the
+    resolved ``ExecutionConfig.delivery`` axis; fused builds per-shard
+    dst-sorted layouts from the plan's edge shards.
     """
     n_parts = plan.n_parts
     assert mesh.shape[axis] == n_parts, (
@@ -414,6 +529,12 @@ def distributed_compute(
     shard_src = jnp.asarray(plan.shard_src)
     shard_dst = jnp.asarray(plan.shard_dst)
     shard_mask = jnp.asarray(plan.shard_mask)
+    layouts = None
+    if delivery == "pallas_fused":
+        layouts = build_shard_delivery(
+            plan.shard_src, plan.shard_dst, plan.shard_mask,
+            nv_pad, ne_pad,
+        )
 
     mapped = build_distributed_runner(
         mesh, ctx, v_program, he_program, max_iters, backend=backend
@@ -424,6 +545,7 @@ def distributed_compute(
             shard_src, shard_dst, shard_mask,
             jnp.asarray(hg.n_vertices, jnp.int32),
             jnp.asarray(hg.n_hyperedges, jnp.int32),
+            layouts,
         )
     unpad_v = jax.tree.map(lambda x: x[: hg.n_vertices], v_out)
     unpad_he = jax.tree.map(lambda x: x[: hg.n_hyperedges], he_out)

@@ -35,14 +35,29 @@ def deliver(
     program: Program,
     e_attr: Pytree = None,
     e_mask: jnp.ndarray | None = None,
+    layout=None,
 ) -> Pytree:
     """Deliver broadcast messages along incidences and combine by
     destination with the *sender* program's MessageCombiner.
 
-    gather (``take``) -> optional per-incidence transform -> mask dead rows
-    to the monoid identity -> segment-reduce by destination.  This is the
-    entire data path of one half-superstep; everything else is pointwise.
+    The reference (``delivery='xla'``) data path is gather (``take``) ->
+    optional per-incidence transform -> mask dead rows to the monoid
+    identity -> segment-reduce by destination.  This is the entire data
+    path of one half-superstep; everything else is pointwise.
+
+    ``layout``: optional precomputed ``DeliveryLayout`` (the
+    ``delivery='pallas_fused'`` design point) — routes the monoid fast
+    path through ``repro.kernels.deliver`` (dst-sorted CSR; gather,
+    mask and combine fused, no ``[nnz, D]`` intermediate).  Custom
+    ``reducer``s and per-incidence ``edge_transform``s always take the
+    reference path: they consume the materialized rows by contract.
     """
+    if (layout is not None and program.reducer is None
+            and program.edge_transform is None):
+        from repro.kernels.deliver import fused_deliver
+
+        return fused_deliver(out_msg, active, layout, program)
+
     rows = jax.tree.map(lambda leaf: jnp.take(leaf, src_ids, axis=0), out_msg)
     if program.edge_transform is not None:
         rows = program.edge_transform(rows, e_attr)
@@ -98,6 +113,7 @@ def superstep_pair(
     v_deg: jnp.ndarray,
     he_card: jnp.ndarray,
     n_real: tuple | None = None,
+    delivery: tuple | None = None,
 ):
     """One (vertex, hyperedge) pair of supersteps. Pure; jit/scan-safe.
 
@@ -107,7 +123,12 @@ def superstep_pair(
     ``n_real`` slots so padding entities never leak into the observable
     stats or the halting decision; traced scalars keep one executable
     serving every real size in the bucket.
+
+    ``delivery``: optional ``(fwd_layout, bwd_layout)`` pair of
+    ``DeliveryLayout``s (vertex->hyperedge, hyperedge->vertex) routing
+    both half-supersteps through the fused delivery kernel.
     """
+    fwd_layout, bwd_layout = delivery if delivery is not None else (None, None)
     v_ids = jnp.arange(hg.n_vertices, dtype=jnp.int32)
     he_ids = jnp.arange(hg.n_hyperedges, dtype=jnp.int32)
 
@@ -118,7 +139,7 @@ def superstep_pair(
     )
     msg_to_he = deliver(
         v_out.msg, v_out.active, hg.src, hg.dst, hg.n_hyperedges,
-        v_program, hg.e_attr, hg.e_mask,
+        v_program, hg.e_attr, hg.e_mask, layout=fwd_layout,
     )
     he_out = _as_out(
         he_program.procedure(step + 1, he_ids, he_attr, msg_to_he, he_card),
@@ -127,7 +148,7 @@ def superstep_pair(
     )
     msg_to_v_next = deliver(
         he_out.msg, he_out.active, hg.dst, hg.src, hg.n_vertices,
-        he_program, hg.e_attr, hg.e_mask,
+        he_program, hg.e_attr, hg.e_mask, layout=bwd_layout,
     )
 
     def count(active, n, real):
@@ -157,6 +178,7 @@ def compute(
     *,
     return_stats: bool = False,
     n_real: tuple | None = None,
+    delivery: tuple | None = None,
 ):
     """Run the alternating-superstep computation; returns the updated
     HyperGraph (and per-iteration activity stats when requested).
@@ -168,6 +190,9 @@ def compute(
 
     ``n_real``: optional ``(nv_real, ne_real)`` for bucket-padded inputs
     (see ``superstep_pair``); activity/halting then ignore padding slots.
+
+    ``delivery``: optional ``(fwd, bwd)`` ``DeliveryLayout`` pair — the
+    fused delivery design point (see ``superstep_pair``).
     """
     v_deg = hg.degrees()
     he_card = hg.cardinalities()
@@ -180,7 +205,7 @@ def compute(
             step, v_attr, he_attr, msg_to_v = args
             nv_attr, nhe_attr, nmsg, stats = superstep_pair(
                 hg, step, v_attr, he_attr, msg_to_v,
-                v_program, he_program, v_deg, he_card, n_real,
+                v_program, he_program, v_deg, he_card, n_real, delivery,
             )
             now_halted = (stats.v_active + stats.he_active) == 0
             return (nv_attr, nhe_attr, nmsg, now_halted, stats)
@@ -219,3 +244,107 @@ def compute(
 compute_jit = partial(jax.jit, static_argnames=("max_iters", "v_program",
                                                 "he_program",
                                                 "return_stats"))(compute)
+
+
+def compute_batch(
+    hg: HyperGraph,
+    v_attr_b: Pytree,
+    he_attr_b: Pytree,
+    batch: int,
+    max_iters: int,
+    initial_msg: Pytree,
+    v_program: Program,
+    he_program: Program,
+    *,
+    n_real: tuple | None = None,
+    delivery: tuple | None = None,
+):
+    """Batched superstep computation with BATCH-AWARE halting.
+
+    ``jax.vmap(compute)`` turns the per-query halting ``lax.cond`` into a
+    ``select``: both branches execute every iteration, so a batch always
+    pays ``max_iters`` supersteps even when every query converged early.
+    Here the vmap sits *inside* the scan — one batched superstep per
+    iteration — so the halting ``cond`` stays a real branch on
+    ``all(halted)`` across the batch: once the LAST query converges the
+    remaining iterations are skipped, restoring early exit for
+    skewed-convergence batches.
+
+    Per-query semantics are preserved bitwise: a halted query's state is
+    frozen by selection (exactly what the vmapped ``cond``-as-``select``
+    computed) and its activity counts report zero, so results and stats
+    match ``B`` sequential ``compute`` runs.
+
+    ``hg`` carries the (unbatched) structure; ``v_attr_b`` /
+    ``he_attr_b`` are the per-query attribute pytrees with a leading
+    batch dim ``batch``.  Returns ``(v_attr_b, he_attr_b,
+    (v_trace, he_trace) [batch, max_iters], supersteps_executed)`` —
+    the executed count is the scan iterations actually run (== the
+    slowest query's convergence, <= max_iters).
+    """
+    v_deg = hg.degrees()
+    he_card = hg.cardinalities()
+    msg0 = constant_initial_msg(initial_msg, hg.n_vertices)
+    msg0_b = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (batch,) + x.shape), msg0
+    )
+
+    def one_step(step, v_attr, he_attr, msg_to_v):
+        # superstep_pair reads only hg's structure (src/dst/e_attr/
+        # e_mask/sizes); the per-query attrs travel as parameters.
+        return superstep_pair(
+            hg, step, v_attr, he_attr, msg_to_v,
+            v_program, he_program, v_deg, he_card, n_real, delivery,
+        )
+
+    batched_step = jax.vmap(one_step, in_axes=(None, 0, 0, 0))
+
+    def select(halted_b, old, new):
+        def one(o, n):
+            m = halted_b.reshape((batch,) + (1,) * (o.ndim - 1))
+            return jnp.where(m, o, n)
+        return jax.tree.map(one, old, new)
+
+    def body(carry, _):
+        step, v_a, he_a, msg, halted_b, executed = carry
+        zero_b = jnp.zeros((batch,), jnp.int32)
+
+        def run(args):
+            step, v_a, he_a, msg, halted_b, executed = args
+            nv_a, nhe_a, nmsg, stats = batched_step(step, v_a, he_a, msg)
+            v_act = jnp.where(halted_b, 0, stats.v_active)
+            he_act = jnp.where(halted_b, 0, stats.he_active)
+            now_halted = halted_b | ((v_act + he_act) == 0)
+            return (
+                select(halted_b, v_a, nv_a),
+                select(halted_b, he_a, nhe_a),
+                select(halted_b, msg, nmsg),
+                now_halted,
+                executed + 1,
+                (v_act, he_act),
+            )
+
+        def skip(args):
+            _, v_a, he_a, msg, halted_b, executed = args
+            return v_a, he_a, msg, halted_b, executed, (zero_b, zero_b)
+
+        nv_a, nhe_a, nmsg, halted2, executed, stats = jax.lax.cond(
+            halted_b.all(), skip, run,
+            (step, v_a, he_a, msg, halted_b, executed),
+        )
+        return (step + 2, nv_a, nhe_a, nmsg, halted2, executed), stats
+
+    init = (
+        jnp.asarray(0, jnp.int32),
+        v_attr_b,
+        he_attr_b,
+        msg0_b,
+        jnp.zeros((batch,), bool),
+        jnp.asarray(0, jnp.int32),
+    )
+    (_, v_a, he_a, _, _, executed), (v_tr, he_tr) = jax.lax.scan(
+        body, init, None, length=max_iters
+    )
+    # [max_iters, batch] -> [batch, max_iters]: match the vmap layout
+    # callers already consume.
+    return v_a, he_a, (v_tr.T, he_tr.T), executed

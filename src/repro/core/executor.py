@@ -35,6 +35,12 @@ import numpy as np
 from repro.core.clique import clique_expansion_size, to_graph
 from repro.core.engine import compute, compute_jit
 from repro.core.hypergraph import HyperGraph
+from repro.kernels.deliver import (
+    DELIVERY_MODES,
+    layout_pair,
+    plan_ell_width,
+    select_lowering,
+)
 
 from repro.motifs.intersect import INTERSECT_KERNELS
 
@@ -87,6 +93,17 @@ class ExecutionConfig:
         (``Engine.analyze``) runs; iterative ``run`` ignores it.
         ``auto`` = ``repro.motifs.select_intersect_kernel`` (word lanes
         vs sort-merge work per pair).
+      delivery: ``xla`` | ``pallas_fused`` | ``auto`` — the
+        deliver/combine data path of every half-superstep.  ``xla`` is
+        the reference gather -> mask -> segment-reduce;
+        ``pallas_fused`` precomputes a dst-sorted CSR layout once per
+        structure (``repro.kernels.deliver``) and fuses gather, mask
+        and combine so the ``[nnz, D]`` intermediate never hits HBM.
+        ``auto`` resolves via ``select_delivery``'s cost model (message
+        width, degree skew via the ELL overflow, nnz, platform
+        lowering), falling back to ``xla`` for custom ``reducer``s and
+        per-incidence ``edge_transform``s — the non-monoid paths the
+        fused kernel cannot legally take.
     """
 
     representation: str = "auto"
@@ -100,6 +117,7 @@ class ExecutionConfig:
     clique_edge_budget: float = 4.0
     replicated_bias: float = 0.5
     intersect_kernel: str = "auto"
+    delivery: str = "auto"
 
     def __post_init__(self):
         if self.representation not in REPRESENTATIONS:
@@ -115,6 +133,11 @@ class ExecutionConfig:
             raise ValueError(
                 f"intersect_kernel must be one of {INTERSECT_KERNELS}, "
                 f"got {self.intersect_kernel!r}"
+            )
+        if self.delivery not in DELIVERY_MODES:
+            raise ValueError(
+                f"delivery must be one of {DELIVERY_MODES}, "
+                f"got {self.delivery!r}"
             )
 
 
@@ -133,6 +156,9 @@ class Result:
       superstep_stats: ``(v_active, he_active)`` int32 arrays of length
         ``max_iters`` when ``collect_stats`` was set (any backend),
         else ``None``.
+      supersteps_executed: batched serving only — the superstep pairs
+        the batch-aware halting scan actually ran (== the slowest
+        query's convergence, <= max_iters); ``None`` elsewhere.
       decision: cost-model numbers behind each ``auto`` choice —
         a dict of dicts, one entry per resolved axis.
     """
@@ -144,6 +170,7 @@ class Result:
     partition: str | None = None
     partition_stats: Any = None
     superstep_stats: Any = None
+    supersteps_executed: Any = None
     decision: Mapping[str, Any] = dataclasses.field(default_factory=dict)
 
 
@@ -359,6 +386,132 @@ def select_partition(
     }
 
 
+# Fused-delivery cost model constants (ELL lowering; see
+# ``select_delivery``).  Calibrated on ``benchmarks/bench_delivery.py``:
+# the dense ELL reduce beats XLA's serialized scatter decisively for
+# narrow messages (19x bounded-degree, ~3x zipf-skew — the capped ELL
+# plus the dst-sorted overflow absorbs heavy tails), while wide rows —
+# where the reference gather/scatter already vectorizes — favor the
+# reference path.
+FUSED_MAX_WIDTH_BYTES = 64.0    # per-entity message bytes
+FUSED_ELL_WORK_BUDGET = 4.0     # padded ELL rows per real incidence
+# Below this the layout/dispatch overheads swamp any kernel win AND the
+# decision would be noise-sensitive (same-bucket graphs flipping design
+# points for sub-ms executions); auto stays on the reference path.
+FUSED_MIN_NNZ = 4096
+
+
+def _non_monoid_reason(spec) -> str | None:
+    """Why the fused delivery path is illegal for this spec, or None."""
+    for side, prog in (("v_program", spec.v_program),
+                       ("he_program", spec.he_program)):
+        if getattr(prog, "reducer", None) is not None:
+            return f"{side} has a custom (Seq) reducer"
+        if getattr(prog, "edge_transform", None) is not None:
+            return f"{side} has a per-incidence edge_transform"
+    return None
+
+
+def message_width_bytes(initial_msg: Any) -> float:
+    """Bytes per entity of one broadcast message (from the spec's
+    ``initial_msg`` template — the only static width signal)."""
+    total = 0.0
+    for leaf in jax.tree.leaves(initial_msg):
+        arr = np.asarray(leaf)
+        total += float(arr.size * arr.dtype.itemsize)
+    return max(total, 1.0)
+
+
+def select_delivery(spec, hg: HyperGraph) -> tuple[str, dict]:
+    """Fused vs reference delivery for one spec — the tentpole's cost
+    model over nnz, message width, dtype and degree skew.
+
+    Hard gates first: the fused kernel folds the combine into the
+    layout, so custom ``reducer``s / ``edge_transform``s (which consume
+    materialized per-incidence rows) and empty structures take ``xla``.
+
+    Then per lowering (``repro.kernels.deliver.select_lowering``):
+
+    * ``pallas`` (native TPU): fused delivery reads each message row
+      once per incident edge instead of gather+mask+re-read (~3x HBM
+      traffic) — always projected to win on the monoid path.
+    * ``ell`` (XLA hosts): the win comes from replacing the serialized
+      scatter with a dense reduce, and dies by padding.  Pick fused
+      only while (a) the message row is narrow
+      (``FUSED_MAX_WIDTH_BYTES``) and (b) ELL padding is bounded
+      (``FUSED_ELL_WORK_BUDGET`` padded rows per incidence, both
+      directions — ``plan_ell_width``'s cap keeps heavy-tailed degree
+      skew here too: overflow rides the dst-sorted remainder, which
+      still measures ~3x over the reference on zipf skew).
+    """
+    reason = _non_monoid_reason(spec)
+    why: dict[str, Any] = {}
+    if reason is not None:
+        why["reason"] = f"non-monoid path: {reason}"
+        return "xla", why
+    if hg.nnz == 0 or hg.n_vertices == 0 or hg.n_hyperedges == 0:
+        why["reason"] = "empty structure"
+        return "xla", why
+
+    lowering = select_lowering()
+    why["lowering"] = lowering
+    if lowering != "ell":
+        why["reason"] = (
+            "native pallas lowering: fused path streams each message "
+            "row once (vs 3x reference HBM traffic)"
+        )
+        return "pallas_fused", why
+
+    live = (
+        np.asarray(hg.e_mask) != 0
+        if hg.e_mask is not None
+        else np.ones(hg.nnz, bool)
+    )
+    src = np.asarray(hg.src)[live]
+    dst = np.asarray(hg.dst)[live]
+    nnz = int(live.sum())
+    if nnz == 0:
+        why["reason"] = "no live incidences"
+        return "xla", why
+    width = message_width_bytes(spec.initial_msg)
+    why["message_width_bytes"] = width
+    if nnz < FUSED_MIN_NNZ:
+        why["reason"] = (
+            f"tiny incidence ({nnz} < {FUSED_MIN_NNZ}): layout and "
+            "dispatch overheads dominate"
+        )
+        return "xla", why
+
+    ell_work = 0.0
+    remainder = 0
+    for n_dst, ids in ((hg.n_hyperedges, dst), (hg.n_vertices, src)):
+        deg = np.bincount(ids, minlength=n_dst)
+        k, rem = plan_ell_width(deg, nnz)
+        ell_work += float(n_dst * k + rem)
+        remainder = max(remainder, rem)
+    why.update(
+        nnz=nnz,
+        ell_work_rows=ell_work,
+        ell_work_budget=FUSED_ELL_WORK_BUDGET * 2 * nnz,
+        remainder=remainder,
+        width_budget=FUSED_MAX_WIDTH_BYTES,
+    )
+    if width > FUSED_MAX_WIDTH_BYTES:
+        why["reason"] = (
+            "wide message rows: the reference gather/scatter already "
+            "vectorizes; ELL padding would add traffic"
+        )
+        return "xla", why
+    if ell_work > FUSED_ELL_WORK_BUDGET * 2 * nnz:
+        why["reason"] = "ELL padding exceeds the work budget"
+        return "xla", why
+    why["reason"] = (
+        "narrow messages, bounded ELL padding: dense reduce beats the "
+        "serialized scatter"
+    )
+    return "pallas_fused", why
+
+
 class Engine:
     """The single entry point for hypergraph execution.
 
@@ -392,6 +545,9 @@ class Engine:
         # run()/resolve() on the same hypergraph must not re-run the
         # full strategy sweep.  [(hg, n_parts, strategy, plan, why)]
         self._plan_cache: list = []
+        # Fused-delivery layouts, keyed the same way: the dst-sort +
+        # ELL/CSR precompute is paid once per structure.  [(hg, layouts)]
+        self._delivery_cache: list = []
         # Compile-once serve-many state: the LRU of shape-bucketed
         # executables behind Engine.compile / CompiledAlgorithm (keyed
         # by repro.core.serving.signature), plus the observability
@@ -517,6 +673,37 @@ class Engine:
         del self._plan_cache[:-4]  # bound the strong refs we hold
         return plan, why
 
+    def _resolve_delivery(self, spec, cfg) -> tuple[str, dict]:
+        if cfg.delivery == "xla":
+            return "xla", {"reason": "explicitly configured"}
+        if cfg.delivery == "pallas_fused":
+            reason = _non_monoid_reason(spec)
+            if reason is not None:
+                raise ValueError(
+                    "delivery='pallas_fused' is invalid for "
+                    f"{getattr(spec, 'name', 'this spec')!r}: {reason}; "
+                    "the fused kernel serves monoid combiners only"
+                )
+            if spec.hg0.nnz == 0:
+                raise ValueError(
+                    "delivery='pallas_fused' needs a non-empty incidence"
+                )
+            return "pallas_fused", {"reason": "explicitly configured"}
+        return select_delivery(spec, spec.hg0)
+
+    def _delivery_layouts(self, hg):
+        """Both directions' fused layouts for one structure, cached by
+        hypergraph identity (host-side dst-sort + ELL/CSR precompute)."""
+        for c_hg, lay in self._delivery_cache:
+            if c_hg is hg:
+                return lay
+        lay = layout_pair(
+            hg.src, hg.dst, hg.e_mask, hg.n_vertices, hg.n_hyperedges
+        )
+        self._delivery_cache.append((hg, lay))
+        del self._delivery_cache[:-4]  # bound the strong refs we hold
+        return lay
+
     # -- execution ----------------------------------------------------------
 
     def resolve(
@@ -544,12 +731,17 @@ class Engine:
             decision["backend"] = {
                 "reason": "clique representation executes locally"
             }
+            decision["delivery"] = {
+                "reason": "clique constant-folding runs a host-side "
+                "program; no superstep delivery exists"
+            }
             resolved = dataclasses.replace(
                 cfg,
                 representation="clique",
                 backend="local",
                 max_iters=max_iters,
                 partition_strategy="none",
+                delivery="xla",
             )
             return resolved, None, decision
 
@@ -559,6 +751,8 @@ class Engine:
         decision["backend"] = backend_why
         if part_why:
             decision["partition"] = part_why
+        delivery, delivery_why = self._resolve_delivery(spec, cfg)
+        decision["delivery"] = delivery_why
         resolved = dataclasses.replace(
             cfg,
             representation="bipartite",
@@ -570,6 +764,7 @@ class Engine:
                 plan.name if plan is not None else "none"
             ),
             n_parts=plan.n_parts if plan is not None else cfg.n_parts,
+            delivery=delivery,
         )
         return resolved, plan, decision
 
@@ -593,6 +788,11 @@ class Engine:
 
         if resolved.backend == "local":
             fn = compute_jit if resolved.jit else compute
+            delivery = (
+                self._delivery_layouts(spec.hg0)
+                if resolved.delivery == "pallas_fused"
+                else None
+            )
             out = fn(
                 spec.hg0,
                 max_iters=resolved.max_iters,
@@ -600,6 +800,7 @@ class Engine:
                 v_program=spec.v_program,
                 he_program=spec.he_program,
                 return_stats=resolved.collect_stats,
+                delivery=delivery,
             )
             stats = None
             if resolved.collect_stats:
@@ -626,6 +827,7 @@ class Engine:
             axis=resolved.axis,
             backend=resolved.backend,
             return_stats=resolved.collect_stats,
+            delivery=resolved.delivery,
         )
         stats = None
         if resolved.collect_stats:

@@ -32,8 +32,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.api import constant_initial_msg
-from repro.core.engine import compute
+from repro.core.engine import compute, compute_batch
 from repro.core.hypergraph import HyperGraph
+from repro.kernels.deliver import layout_pair
 
 Pytree = Any
 
@@ -126,6 +127,7 @@ def signature(
     e_attr_sig,
     query_sig,
     batch_pad: int | None,
+    delivery_sig=None,
 ):
     """The executable cache key.
 
@@ -133,6 +135,12 @@ def signature(
     algorithm constants), so distinct specs never collide; everything
     else is the padded-shape/dtype/design-point signature the tentpole
     names: same bucket + same design point = same executable.
+
+    ``delivery_sig``: the fused-delivery layout shapes (ELL width,
+    remainder pad, tile geometry — data-dependent within a shape
+    bucket); ``None`` on the reference path.  Same-bucket hypergraphs
+    usually share them, but a degree-regime shift legitimately
+    recompiles.
     """
     return (
         spec.v_program,
@@ -143,6 +151,7 @@ def signature(
         cfg.axis,
         cfg.max_iters,
         cfg.collect_stats,
+        cfg.delivery,
         n_parts,
         nv_pad,
         ne_pad,
@@ -153,6 +162,7 @@ def signature(
         e_attr_sig,
         query_sig,
         batch_pad,
+        delivery_sig,
     )
 
 
@@ -161,8 +171,17 @@ def signature(
 # --------------------------------------------------------------------------
 
 def _build_local_executable(spec, cfg, has_query, batch_pad, trace_hook):
-    """One jitted callable ``(hgp, nv_real, ne_real, query) ->
-    (v_attr, he_attr, stats)`` over a bucket-padded hypergraph."""
+    """One jitted callable ``(hgp, delivery, nv_real, ne_real, query) ->
+    (v_attr, he_attr, stats, executed)`` over a bucket-padded hypergraph.
+
+    Unbatched requests run ``compute`` (per-run halting ``cond``);
+    batches run ``compute_batch`` — the scan sits OUTSIDE the query
+    vmap, so halting stays a real branch on ``all(halted)`` and a
+    skewed-convergence batch stops at its slowest query instead of
+    paying ``max_iters`` (the batch-aware halting design point).
+    ``executed`` reports the superstep pairs the batch actually ran
+    (``None`` unbatched).
+    """
     # Close over only what the trace needs — NOT the whole spec, whose
     # hg0 (full structure + attrs) would otherwise stay pinned in the
     # Engine's executable LRU for the cache entry's lifetime.
@@ -170,7 +189,7 @@ def _build_local_executable(spec, cfg, has_query, batch_pad, trace_hook):
     initial_msg, bind_query = spec.initial_msg, spec.bind_query
     max_iters, collect_stats = cfg.max_iters, cfg.collect_stats
 
-    def raw(hgp: HyperGraph, nv_real, ne_real, query):
+    def raw(hgp: HyperGraph, delivery, nv_real, ne_real, query):
         trace_hook()
         if has_query:
             hgp = bind_query(hgp, query)
@@ -182,16 +201,36 @@ def _build_local_executable(spec, cfg, has_query, batch_pad, trace_hook):
             he_program=he_program,
             return_stats=collect_stats,
             n_real=(nv_real, ne_real),
+            delivery=delivery,
         )
         stats = None
         if collect_stats:
             out, stats = out
-        return out.v_attr, out.he_attr, stats
+        return out.v_attr, out.he_attr, stats, None
 
-    fn = raw
-    if batch_pad is not None:
-        fn = jax.vmap(raw, in_axes=(None, None, None, 0))
-    return jax.jit(fn)
+    def raw_batch(hgp: HyperGraph, delivery, nv_real, ne_real, queries):
+        trace_hook()
+        # Bind every query onto the padded structure, keep only the
+        # per-query attribute states (the structure itself is shared).
+        # NOTE: bind_query may only touch v_attr / he_attr — e_attr and
+        # e_mask stay unbatched by the batch-aware halting contract.
+        bound = jax.vmap(lambda q: bind_query(hgp, q))(queries)
+        v_attr_b, he_attr_b = bound.v_attr, bound.he_attr
+        v_b, he_b, stats, executed = compute_batch(
+            hgp,
+            v_attr_b,
+            he_attr_b,
+            batch_pad,
+            max_iters,
+            initial_msg,
+            v_program,
+            he_program,
+            n_real=(nv_real, ne_real),
+            delivery=delivery,
+        )
+        return v_b, he_b, (stats if collect_stats else None), executed
+
+    return jax.jit(raw if batch_pad is None else raw_batch)
 
 
 def _build_distributed_executable(
@@ -199,10 +238,12 @@ def _build_distributed_executable(
     trace_hook,
 ):
     """Same contract as the local builder, plus the plan's padded edge
-    shards: ``(hgp, shard_src, shard_dst, shard_mask, nv_real, ne_real,
-    query) -> (v_attr, he_attr, stats)``.  Query binding happens on the
-    full padded state *before* ``shard_map`` shards it, so one runner
-    serves both backends' layouts."""
+    shards: ``(hgp, shard_src, shard_dst, shard_mask, delivery, nv_real,
+    ne_real, query) -> (v_attr, he_attr, stats, None)``.  Query binding
+    happens on the full padded state *before* ``shard_map`` shards it,
+    so one runner serves both backends' layouts.  Batches vmap the whole
+    runner (batch-aware halting is a local-backend feature for now: the
+    distributed scan lives inside ``shard_map``)."""
     from repro.core.distributed import DistContext, build_distributed_runner
 
     ctx = DistContext(
@@ -216,8 +257,8 @@ def _build_distributed_executable(
     initial_msg, bind_query = spec.initial_msg, spec.bind_query
     collect_stats = cfg.collect_stats
 
-    def raw(hgp: HyperGraph, s_src, s_dst, s_mask, nv_real, ne_real,
-            query):
+    def raw(hgp: HyperGraph, s_src, s_dst, s_mask, delivery, nv_real,
+            ne_real, query):
         trace_hook()
         if has_query:
             hgp = bind_query(hgp, query)
@@ -225,14 +266,16 @@ def _build_distributed_executable(
         v_out, he_out, v_trace, he_trace = mapped(
             hgp.v_attr, hgp.he_attr, msg0,
             hgp.degrees(), hgp.cardinalities(),
-            s_src, s_dst, s_mask, nv_real, ne_real,
+            s_src, s_dst, s_mask, nv_real, ne_real, delivery,
         )
         stats = (v_trace, he_trace) if collect_stats else None
-        return v_out, he_out, stats
+        return v_out, he_out, stats, None
 
     fn = raw
     if batch_pad is not None:
-        fn = jax.vmap(raw, in_axes=(None, None, None, None, None, None, 0))
+        fn = jax.vmap(
+            raw, in_axes=(None, None, None, None, None, None, None, 0)
+        )
     return jax.jit(fn)
 
 
@@ -392,12 +435,32 @@ class CompiledAlgorithm:
             shard_len_pad = bucket_dim(plan.shard_len)
             shards = _pad_shards(plan, shard_len_pad)
         hgp = base.padded(nv_pad, ne_pad, nnz_pad)
+        # Fused delivery: the dst-sort + ELL/CSR precompute happens HERE,
+        # once per (hypergraph, bucket) — the serve loop never re-sorts.
+        # Built from the PADDED structure (padding lanes carry e_mask=0
+        # and fold to identity), so the layouts match the executable's
+        # shapes; their data-dependent dims enter the cache signature.
+        delivery = None
+        delivery_sig = None
+        if cfg.delivery == "pallas_fused":
+            if cfg.backend == "local":
+                delivery = layout_pair(
+                    hgp.src, hgp.dst, hgp.e_mask, nv_pad, ne_pad
+                )
+            else:
+                from repro.core.distributed import build_shard_delivery
+
+                delivery = build_shard_delivery(
+                    *(np.asarray(s) for s in shards), nv_pad, ne_pad
+                )
+            delivery_sig = tuple(l.shape_signature() for l in delivery)
         prep = dict(
             base=base,
             nv=nv, ne=ne,
             nv_pad=nv_pad, ne_pad=ne_pad, nnz_pad=nnz_pad,
             plan=plan, n_parts=n_parts, shard_len_pad=shard_len_pad,
             shards=shards, hgp=hgp,
+            delivery=delivery, delivery_sig=delivery_sig,
             attr_sigs=(
                 _attr_sig(hgp.v_attr), _attr_sig(hgp.he_attr),
                 _attr_sig(hgp.e_attr),
@@ -443,6 +506,7 @@ class CompiledAlgorithm:
             v_attr_sig=v_sig, he_attr_sig=he_sig, e_attr_sig=e_sig,
             query_sig=_query_sig(one_query),
             batch_pad=b_pad,
+            delivery_sig=prep["delivery_sig"],
         )
 
         if distributed:
@@ -456,8 +520,8 @@ class CompiledAlgorithm:
             )
             s_src, s_dst, s_mask = prep["shards"]
             with engine.mesh:
-                v_attr, he_attr, stats = exe(
-                    hgp, s_src, s_dst, s_mask,
+                v_attr, he_attr, stats, executed = exe(
+                    hgp, s_src, s_dst, s_mask, prep["delivery"],
                     jnp.asarray(nv, jnp.int32),
                     jnp.asarray(ne, jnp.int32),
                     query,
@@ -469,8 +533,8 @@ class CompiledAlgorithm:
                     spec, cfg, has_query, b_pad, engine._note_trace,
                 ),
             )
-            v_attr, he_attr, stats = exe(
-                hgp,
+            v_attr, he_attr, stats, executed = exe(
+                hgp, prep["delivery"],
                 jnp.asarray(nv, jnp.int32),
                 jnp.asarray(ne, jnp.int32),
                 query,
@@ -501,5 +565,6 @@ class CompiledAlgorithm:
             partition=plan.name if plan is not None else None,
             partition_stats=plan.stats if plan is not None else None,
             superstep_stats=stats,
+            supersteps_executed=executed,
             decision=self.decision,
         )

@@ -1,0 +1,134 @@
+"""Fused incidence delivery — the delivery-kernel registry.
+
+``repro.core.engine.deliver`` routes through here when a
+``DeliveryLayout`` is supplied (the ``delivery='pallas_fused'`` design
+point).  One fused data path, two lowerings:
+
+* ``pallas`` — the scalar-prefetch gather + mask + segment-combine
+  kernel (``fused.deliver_fused_pallas``), native on TPU, exercised in
+  interpret mode by the test suite;
+* ``ell`` — the identical layout driven through stock XLA ops
+  (``xla.deliver_ell_leaf``): dense ELL reduce + sorted-COO overflow,
+  the fast path on hosts without a native Pallas backend.
+
+``select_lowering`` picks per platform; ``REPRO_DELIVERY_LOWERING``
+(``ell`` | ``pallas`` | ``pallas_interpret``) overrides for tests and
+experiments.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.deliver.fused import deliver_fused_pallas
+from repro.kernels.deliver.layout import (
+    DeliveryLayout,
+    build_delivery_layout,
+    layout_pair,
+    plan_ell_width,
+    tile_block_bounds,
+)
+from repro.kernels.deliver.xla import deliver_ell_leaf
+from repro.sparse.segment import MONOIDS
+
+__all__ = [
+    "DELIVERY_MODES",
+    "DeliveryLayout",
+    "build_delivery_layout",
+    "deliver_ell_leaf",
+    "deliver_fused_pallas",
+    "fused_deliver",
+    "layout_pair",
+    "plan_ell_width",
+    "select_lowering",
+    "tile_block_bounds",
+]
+
+# The ``ExecutionConfig.delivery`` axis values.
+DELIVERY_MODES = ("auto", "xla", "pallas_fused")
+
+Pytree = Any
+
+
+def select_lowering() -> str:
+    """``pallas`` on TPU, ``ell`` elsewhere; env-overridable."""
+    forced = os.environ.get("REPRO_DELIVERY_LOWERING")
+    if forced:
+        if forced not in ("ell", "pallas", "pallas_interpret"):
+            raise ValueError(
+                "REPRO_DELIVERY_LOWERING must be ell | pallas | "
+                f"pallas_interpret, got {forced!r}"
+            )
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ell"
+
+
+def _pallas_leaf(leaf, layout, monoid, active, *, interpret):
+    """Shape-normalize one leaf for the 2-D Pallas kernel."""
+    shape = leaf.shape
+    msgs2d = leaf.reshape(shape[0], -1)
+    if monoid.name == "or":
+        # bool has no MXU contraction: lower "or" as int32 max.
+        out = _pallas_leaf(
+            msgs2d.astype(jnp.int32), layout, MONOIDS["max"], active,
+            interpret=interpret,
+        )
+        # > 0, not astype(bool): empty destinations hold the max
+        # identity (iinfo.min), which must read back as False.
+        return (out > 0).reshape((layout.n_dst,) + shape[1:])
+    ident = monoid.identity(msgs2d.dtype)
+    msgs_aug = jnp.concatenate(
+        [msgs2d, jnp.full((1, msgs2d.shape[1]), ident, msgs2d.dtype)]
+    )
+    if active is not None:
+        act_aug = jnp.concatenate(
+            [active.astype(jnp.int32), jnp.ones((1,), jnp.int32)]
+        )
+        live = jnp.take(act_aug, layout.sorted_src, axis=0)
+    else:
+        live = jnp.ones_like(layout.sorted_src)
+    out = deliver_fused_pallas(
+        msgs_aug,
+        layout.sorted_src,
+        layout.sorted_dst,
+        live,
+        layout.tile_bounds,
+        layout.n_dst,
+        monoid.name,
+        layout.max_blocks,
+        block_n=layout.block_n,
+        block_e=layout.block_e,
+        interpret=interpret,
+    )
+    return out.reshape((layout.n_dst,) + shape[1:])
+
+
+def fused_deliver(
+    out_msg: Pytree,
+    active,
+    layout: DeliveryLayout,
+    program,
+    lowering: str | None = None,
+) -> Pytree:
+    """Deliver + combine a message pytree through the fused layout.
+
+    Drop-in for the reference gather/mask/segment path of
+    ``repro.core.engine.deliver`` on the monoid fast path (the caller
+    guarantees ``program.reducer is None`` and no ``edge_transform``);
+    per-leaf monoids resolve exactly as in the reference.
+    """
+    lowering = lowering or select_lowering()
+
+    def one(leaf):
+        monoid = program.monoid_for(leaf)
+        if lowering == "ell":
+            return deliver_ell_leaf(leaf, layout, monoid, active)
+        return _pallas_leaf(
+            leaf, layout, monoid, active,
+            interpret=(lowering == "pallas_interpret"),
+        )
+
+    return jax.tree.map(one, out_msg)

@@ -1,0 +1,309 @@
+"""Dst-sorted CSR delivery layouts: the precompute behind fused delivery.
+
+The deliver/combine half-superstep is MESH's hot path.  Its reference
+lowering (``repro.core.engine.deliver``) is gather -> mask -> segment
+reduce, which materializes a ``[nnz, D]`` rows array in HBM and re-reads
+it — roughly 3x the traffic the combine fundamentally needs.  The fused
+path removes that intermediate by reorganizing the incidence ONCE, on the
+host, into a destination-sorted CSR layout:
+
+* ``order`` — the *stable* dst-sort permutation (stability keeps each
+  segment's rows in original incidence order, so reduction order — and
+  therefore bitwise results for order-sensitive float sums — matches the
+  reference scatter path);
+* ``row_offsets`` — CSR offsets per destination, from which the Pallas
+  kernel derives per-output-tile *edge-block bounds* (block-sparse skip:
+  each grid step reads only its incident edge blocks, never a full
+  j-sweep);
+* an ELL + sorted-remainder packing for the XLA lowering on hosts
+  without a native Pallas backend: the first ``k`` incidences of every
+  destination live in a dense ``[n_dst, k]`` id table (reduced with one
+  vectorized dense reduction — no serialized scatter), overflow
+  incidences of heavy destinations stay in dst-sorted COO and take a
+  sorted segment reduce.
+
+Statically-dead incidences (``e_mask == 0`` — partition padding, bucket
+padding) are folded into the layout itself: their table entries point at
+the appended *identity row* ``n_src``, so the runtime path never touches
+a mask for them.  Only dynamic ``active`` vectors cost work at runtime.
+
+Everything here is host-side numpy on concrete arrays; the products are
+device arrays registered as one pytree (``DeliveryLayout``) so layouts
+flow through jit / scan / vmap / shard_map as ordinary operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ELL planning: grow k (powers of two) until the COO remainder holds at
+# most this fraction of the incidences, then stop at the cap — heavy
+# destinations past the cap are better served by the remainder's sorted
+# segment reduce than by padding every destination to their degree.
+ELL_REMAINDER_FRACTION = 0.25
+ELL_K_CAP = 64
+# Remainder / padded-edge buckets: pow2 with a small floor, mirroring
+# ``repro.core.serving.bucket_dim`` so serving signatures stay bounded.
+_PAD_FLOOR = 8
+
+
+def _pow2_at_least(n: int, floor: int = 1) -> int:
+    b = max(int(floor), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def plan_ell_width(degrees: np.ndarray, nnz: int) -> tuple[int, int]:
+    """Pick the ELL width ``k`` for a degree distribution.
+
+    Returns ``(k, remainder)``: the smallest power-of-two ``k`` (capped
+    at ``ELL_K_CAP``) whose overflow — incidences past each
+    destination's first ``k`` — is at most ``ELL_REMAINDER_FRACTION`` of
+    ``nnz``, plus the overflow count at that ``k``.  Deterministic in
+    the degree histogram, so the Engine's cost model and the layout
+    builder can never disagree.
+    """
+    if nnz <= 0 or degrees.size == 0:
+        return 1, 0
+    k = 1
+    while True:
+        remainder = int(np.maximum(degrees - k, 0).sum())
+        if remainder <= ELL_REMAINDER_FRACTION * nnz or k >= ELL_K_CAP:
+            return k, remainder
+        k *= 2
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeliveryLayout:
+    """One direction's precomputed fused-delivery layout.
+
+    Array children (device arrays; leading dims may gain a partition dim
+    under the distributed executor):
+
+      sorted_src: ``[nnz_pad]`` int32 — sender ids in dst-sorted order;
+        statically-dead and padding lanes point at the identity row
+        ``n_src``.
+      sorted_dst: ``[nnz_pad]`` int32 — destination ids, non-decreasing;
+        padding lanes carry ``n_dst`` (no real destination).
+      ell_idx: ``[n_dst, k]`` int32 — first-``k`` sender ids per
+        destination; empty slots point at the identity row.
+      rem_src / rem_dst: ``[rem_pad]`` int32 — overflow incidences in
+        dst-sorted COO (padding lanes: identity row -> last destination,
+        keeping ``rem_dst`` sorted; they contribute the monoid identity).
+      tile_bounds: ``[n_tiles, 2]`` int32 — per output tile of
+        ``block_n`` destinations: (first edge-block index, n edge
+        blocks) at ``block_e`` granularity.  The Pallas kernel's
+        block-sparse skip; recomputed by ``with_tile_geometry`` when a
+        caller needs a different tiling.
+
+    Static aux: ``n_src``, ``n_dst``, ``nnz`` (real incidences),
+    ``block_n``, ``block_e``, ``max_blocks`` (grid extent of the skip).
+    """
+
+    sorted_src: jnp.ndarray
+    sorted_dst: jnp.ndarray
+    ell_idx: jnp.ndarray
+    rem_src: jnp.ndarray
+    rem_dst: jnp.ndarray
+    tile_bounds: jnp.ndarray
+    n_src: int
+    n_dst: int
+    nnz: int
+    block_n: int
+    block_e: int
+    max_blocks: int
+
+    def tree_flatten(self):
+        children = (
+            self.sorted_src, self.sorted_dst, self.ell_idx,
+            self.rem_src, self.rem_dst, self.tile_bounds,
+        )
+        aux = (
+            self.n_src, self.n_dst, self.nnz, self.block_n, self.block_e,
+            self.max_blocks,
+        )
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def k(self) -> int:
+        return int(self.ell_idx.shape[-1])
+
+    @property
+    def rem_len(self) -> int:
+        return int(self.rem_src.shape[-1])
+
+    def shape_signature(self) -> tuple:
+        """Hashable shape tuple for the serving executable cache key."""
+        return (
+            tuple(self.sorted_src.shape), tuple(self.ell_idx.shape),
+            tuple(self.rem_src.shape), tuple(self.tile_bounds.shape),
+            self.n_src, self.n_dst, self.nnz,
+        )
+
+
+def tile_block_bounds(
+    row_offsets: np.ndarray, n_dst_pad: int, block_n: int, block_e: int
+) -> tuple[np.ndarray, int]:
+    """Per-output-tile edge-block ranges from CSR row offsets.
+
+    Tile ``i`` covers destinations ``[i*block_n, (i+1)*block_n)``; its
+    incident edges are CSR rows ``[row_offsets[lo], row_offsets[hi])``,
+    which span edge blocks ``[floor(lo_e/block_e), ceil(hi_e/block_e))``.
+    Boundary blocks contain neighbors' edges; the kernel masks them by
+    destination.  Returns ``([n_tiles, 2] (start, count), max_count)``.
+    """
+    n_tiles = n_dst_pad // block_n
+    bounds = np.zeros((n_tiles, 2), np.int32)
+    n_real = len(row_offsets) - 1
+    for i in range(n_tiles):
+        lo = row_offsets[min(i * block_n, n_real)]
+        hi = row_offsets[min((i + 1) * block_n, n_real)]
+        b_lo = lo // block_e
+        b_hi = -(-hi // block_e)
+        bounds[i] = (b_lo, max(b_hi - b_lo, 0))
+    max_blocks = int(bounds[:, 1].max()) if n_tiles else 0
+    return bounds, max(max_blocks, 1)
+
+
+def build_delivery_layout(
+    src,
+    dst,
+    e_mask,
+    n_src: int,
+    n_dst: int,
+    *,
+    k: int | None = None,
+    block_n: int = 128,
+    block_e: int = 256,
+    pad_sorted_to: int | None = None,
+    rem_pad_to: int | None = None,
+) -> DeliveryLayout:
+    """Build one direction's layout from a concrete incidence list.
+
+    ``src``/``dst``/``e_mask`` are host-transferable arrays (``e_mask``
+    may be None).  ``k=None`` lets ``plan_ell_width`` pick the ELL width
+    from the live-degree histogram.  ``pad_sorted_to`` pads the sorted
+    edge arrays (identity lanes) so same-bucket hypergraphs share one
+    executable signature; it must be >= nnz.  ``rem_pad_to`` forces the
+    remainder pad length (>= the overflow count) so per-shard layouts
+    stack into one shard_map operand.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    nnz = len(src)
+    live = (
+        np.asarray(e_mask) != 0
+        if e_mask is not None
+        else np.ones(nnz, bool)
+    )
+
+    order = np.argsort(dst, kind="stable")
+    s_src = src[order]
+    s_dst = dst[order]
+    s_live = live[order]
+    # Fold the static mask into the ids: dead incidences gather the
+    # appended identity row and deliver the monoid identity for free.
+    red_src = np.where(s_live, s_src, n_src).astype(np.int32)
+
+    live_deg = np.bincount(
+        s_dst[s_live], minlength=max(n_dst, 1)
+    )[:n_dst] if nnz else np.zeros(max(n_dst, 1), np.int64)[:n_dst]
+    n_live = int(s_live.sum())
+    if k is None:
+        k, _ = plan_ell_width(live_deg, n_live)
+    k = max(int(k), 1)
+
+    # ELL pack (first k live incidences per destination) + overflow COO.
+    # Vectorized: each live incidence's rank within its (sorted, stable)
+    # segment decides its slot — rank < k lands in the dense table,
+    # rank >= k overflows to the dst-sorted remainder.
+    ell = np.full((n_dst, k), n_src, np.int32)
+    counts = np.bincount(s_dst, minlength=max(n_dst, 1))[
+        : max(n_dst, 1)
+    ]
+    seg_starts = np.zeros(max(n_dst, 1) + 1, np.int64)
+    np.cumsum(counts, out=seg_starts[1:])
+    if nnz:
+        live_cum = np.cumsum(s_live)
+        live_before = np.concatenate([[0], live_cum])[
+            seg_starts[s_dst]
+        ]
+        live_rank = live_cum - 1 - live_before  # valid on live lanes
+        in_ell = s_live & (live_rank < k)
+        ell[s_dst[in_ell], live_rank[in_ell]] = red_src[in_ell]
+        overflow = s_live & (live_rank >= k)
+        rem_s = red_src[overflow]
+        rem_d = s_dst[overflow]  # still sorted: overflow preserves order
+    else:
+        rem_s = np.zeros(0, np.int32)
+        rem_d = np.zeros(0, np.int64)
+    if rem_pad_to is not None:
+        assert rem_pad_to >= len(rem_s), (rem_pad_to, len(rem_s))
+        rem_pad = int(rem_pad_to)
+    else:
+        rem_pad = _pow2_at_least(max(len(rem_s), 1), _PAD_FLOOR)
+    rem_src = np.full(rem_pad, n_src, np.int32)
+    # Padding remainder lanes keep rem_dst sorted by pointing at the
+    # last destination with an identity sender (contributes nothing).
+    rem_dst = np.full(rem_pad, max(n_dst - 1, 0), np.int32)
+    rem_src[: len(rem_s)] = rem_s
+    rem_dst[: len(rem_d)] = rem_d
+
+    # Sorted edge arrays for the Pallas kernel, padded to the block /
+    # bucket size; padding lanes: identity sender, out-of-range dst.
+    nnz_pad = pad_sorted_to if pad_sorted_to is not None else nnz
+    assert nnz_pad >= nnz, (nnz_pad, nnz)
+    nnz_pad = -(-max(nnz_pad, 1) // block_e) * block_e
+    n_dst_pad = -(-max(n_dst, 1) // block_n) * block_n
+    sorted_src = np.full(nnz_pad, n_src, np.int32)
+    sorted_dst = np.full(nnz_pad, n_dst_pad, np.int32)
+    sorted_src[:nnz] = red_src
+    sorted_dst[:nnz] = s_dst
+
+    row_offsets = seg_starts[: n_dst + 1]
+    bounds, max_blocks = tile_block_bounds(
+        row_offsets, n_dst_pad, block_n, block_e
+    )
+
+    return DeliveryLayout(
+        sorted_src=jnp.asarray(sorted_src),
+        sorted_dst=jnp.asarray(sorted_dst),
+        ell_idx=jnp.asarray(ell),
+        rem_src=jnp.asarray(rem_src),
+        rem_dst=jnp.asarray(rem_dst),
+        tile_bounds=jnp.asarray(bounds),
+        n_src=int(n_src),
+        n_dst=int(n_dst),
+        nnz=int(nnz),
+        block_n=int(block_n),
+        block_e=int(block_e),
+        max_blocks=int(max_blocks),
+    )
+
+
+def layout_pair(
+    hg_src, hg_dst, e_mask, n_vertices: int, n_hyperedges: int, **kw
+) -> tuple[DeliveryLayout, DeliveryLayout]:
+    """Both half-superstep directions for one incidence list:
+    vertex->hyperedge (combine by ``dst``) and hyperedge->vertex
+    (combine by ``src``)."""
+    fwd = build_delivery_layout(
+        hg_src, hg_dst, e_mask, n_vertices, n_hyperedges, **kw
+    )
+    bwd = build_delivery_layout(
+        hg_dst, hg_src, e_mask, n_hyperedges, n_vertices, **kw
+    )
+    return fwd, bwd
+
+
+Pytree = Any

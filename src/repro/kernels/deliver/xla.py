@@ -1,0 +1,80 @@
+"""The fused delivery data path expressed to XLA (ELL + sorted COO).
+
+Same algorithm as ``fused.deliver_fused_pallas`` — mask folded into the
+layout, message rows read once, combine without a serialized scatter —
+but lowered through stock XLA ops for hosts without a native Pallas
+backend (CPU CI, GPU until a Triton port lands):
+
+* the first ``k`` incidences of every destination sit in the layout's
+  dense ``[n_dst, k]`` id table: one vectorized gather and one dense
+  axis reduction replace the scatter (XLA's CPU scatter-add serializes;
+  a ``[n_dst, k, D]`` reduce vectorizes);
+* overflow incidences of heavy destinations take a segment reduce over
+  *dst-sorted* ids (``indices_are_sorted=True``) and merge in with one
+  ``combine``.
+
+Statically-dead lanes were redirected to the appended identity row at
+layout-build time, so only a dynamic ``active`` vector costs a mask
+here — and it is a ``[n, k]`` byte mask, not an ``[nnz, D]`` float
+``where``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.deliver.layout import DeliveryLayout
+from repro.sparse.segment import Monoid
+
+_AXIS_REDUCE = {
+    "sum": jnp.sum,
+    "min": jnp.min,
+    "max": jnp.max,
+    "prod": jnp.prod,
+}
+
+
+def _reduce_axis1(x: jnp.ndarray, monoid: Monoid) -> jnp.ndarray:
+    if monoid.name == "or":
+        return jnp.any(x, axis=1)
+    return _AXIS_REDUCE[monoid.name](x, axis=1)
+
+
+def deliver_ell_leaf(
+    msgs: jnp.ndarray,
+    layout: DeliveryLayout,
+    monoid: Monoid,
+    active: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """One leaf's fused delivery: ``[n_src, ...] -> [n_dst, ...]``."""
+    ident = monoid.identity(msgs.dtype)
+    ident_row = jnp.full((1,) + msgs.shape[1:], ident, msgs.dtype)
+    msgs_aug = jnp.concatenate([msgs, ident_row], axis=0)
+
+    act_aug = None
+    if active is not None:
+        act_aug = jnp.concatenate(
+            [active.astype(bool), jnp.ones((1,), bool)]
+        )
+
+    n_dst, k = layout.ell_idx.shape
+    trail = (1,) * (msgs.ndim - 1)
+
+    rows = jnp.take(
+        msgs_aug, layout.ell_idx.reshape(-1), axis=0
+    ).reshape((n_dst, k) + msgs.shape[1:])
+    if act_aug is not None:
+        live = jnp.take(act_aug, layout.ell_idx, axis=0)  # [n_dst, k]
+        rows = jnp.where(live.reshape((n_dst, k) + trail), rows, ident)
+    out = _reduce_axis1(rows, monoid)
+
+    rem_rows = jnp.take(msgs_aug, layout.rem_src, axis=0)
+    if act_aug is not None:
+        rem_live = jnp.take(act_aug, layout.rem_src, axis=0)
+        rem_rows = jnp.where(
+            rem_live.reshape((-1,) + trail), rem_rows, ident
+        )
+    overflow = monoid.segment(
+        rem_rows, layout.rem_dst, num_segments=n_dst,
+        indices_are_sorted=True,
+    )
+    return monoid.combine(out, overflow)

@@ -18,6 +18,14 @@ Pallas revisiting-accumulator pattern, same as the segsum kernel).
 popcount is SWAR (shift/mask/multiply on uint32) rather than
 ``lax.population_count`` so the kernel stays portable across Pallas
 backends that lack a popcount lowering.
+
+Two entry points: ``isect_pallas`` consumes pre-gathered ``[P, W]`` row
+pairs (the original form — the ops wrapper's outside-Pallas ``take``
+materializes both operands in HBM); ``isect_pallas_fused`` takes the
+packed ``[E, W]`` bitset plus scalar-prefetched pair ids and gathers
+rows *inside* the kernel, so skewed pair batches re-reading the same hot
+hyperedge rows never materialize the ``[P, W]`` operands at all — the
+same fused-gather BlockSpec pattern as ``repro.kernels.deliver``.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
@@ -78,3 +87,63 @@ def isect_pallas(
         out_shape=jax.ShapeDtypeStruct((p,), jnp.int32),
         interpret=interpret,
     )(a_bits, b_bits)
+
+
+def _isect_fused_kernel(ea_ref, eb_ref, bits_ref, out_ref,
+                        *, block_p: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Scalar-prefetched pair ids -> in-kernel row gather from the word
+    # tile: the [P, W] operand pair never exists outside VMEM.
+    ea = ea_ref[pl.ds(i * block_p, block_p)]
+    eb = eb_ref[pl.ds(i * block_p, block_p)]
+    bits = bits_ref[...]                          # [E, BW] word tile
+    a = jnp.take(bits, ea, axis=0)                # [BP, BW]
+    b = jnp.take(bits, eb, axis=0)
+    counts = _popcount_u32(a & b).astype(jnp.int32)
+    out_ref[...] += counts.sum(axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_p", "block_w", "interpret")
+)
+def isect_pallas_fused(
+    bits: jnp.ndarray,
+    ea: jnp.ndarray,
+    eb: jnp.ndarray,
+    *,
+    block_p: int = 512,
+    block_w: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``bits [E, W] uint32``, ``ea``/``eb [P] int32`` -> ``[P]`` int32.
+
+    The fused-gather variant: pair ids ride the scalar-prefetch channel
+    (``pltpu.PrefetchScalarGridSpec``) and rows are gathered in-kernel
+    per word tile, so a skewed pair batch hitting the same hot rows
+    costs VMEM reads, not a ``[P, W]``-materializing HBM gather.  P must
+    be a multiple of ``block_p`` and W of ``block_w`` (ops.py pads; id
+    padding rows point at row 0 and are sliced off).
+    """
+    p = ea.shape[0]
+    e, w = bits.shape
+    assert p % block_p == 0 and w % block_w == 0, (p, w, block_p, block_w)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(p // block_p, w // block_w),
+        in_specs=[
+            pl.BlockSpec((e, block_w), lambda i, j, ea, eb: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i, j, ea, eb: (i,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_isect_fused_kernel, block_p=block_p),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.int32),
+        interpret=interpret,
+    )(ea, eb, bits)

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.isect.isect import isect_pallas
+from repro.kernels.isect.isect import isect_pallas, isect_pallas_fused
 
 
 def pair_intersect_bitset(
@@ -14,21 +14,43 @@ def pair_intersect_bitset(
     *,
     block_p: int = 512,
     block_w: int = 8,
+    fused: bool = True,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Intersection size per hyperedge pair over a packed bitset index.
 
     ``bits`` is the ``[E, W] uint32`` member bitset
     (``repro.motifs.intersect.build_index(hg, "bitset").data``); ``ea`` /
-    ``eb`` are ``[P]`` hyperedge ids.  Rows are gathered host-of-kernel
-    (XLA fuses the gather), the streaming AND+popcount runs in Pallas.
+    ``eb`` are ``[P]`` hyperedge ids.
+
+    ``fused=True`` (default): pair ids are scalar-prefetched and rows
+    gathered *inside* the kernel per word tile — the ``[P, W]`` operand
+    pair never materializes in HBM, which is the whole cost for skewed
+    batches re-reading hot rows.  ``fused=False`` keeps the original
+    host-of-kernel gather (XLA fuses the ``take``) as the reference
+    form.
     """
     n = ea.shape[0]
-    a = jnp.take(bits, ea, axis=0)
-    b = jnp.take(bits, eb, axis=0)
+    if n == 0 or bits.shape[0] == 0:
+        return jnp.zeros((n,), jnp.int32)
     p_pad = -(-max(n, 1) // block_p) * block_p
     w = bits.shape[1]
     w_pad = -(-w // block_w) * block_w
+    if fused:
+        ea_p = jnp.zeros((p_pad,), jnp.int32).at[:n].set(
+            ea.astype(jnp.int32)
+        )
+        eb_p = jnp.zeros((p_pad,), jnp.int32).at[:n].set(
+            eb.astype(jnp.int32)
+        )
+        bits_p = jnp.pad(bits, ((0, 0), (0, w_pad - w)))
+        out = isect_pallas_fused(
+            bits_p, ea_p, eb_p,
+            block_p=block_p, block_w=block_w, interpret=interpret,
+        )
+        return out[:n]
+    a = jnp.take(bits, ea, axis=0)
+    b = jnp.take(bits, eb, axis=0)
     a = jnp.pad(a, ((0, p_pad - n), (0, w_pad - w)))
     b = jnp.pad(b, ((0, p_pad - n), (0, w_pad - w)))
     out = isect_pallas(

@@ -129,9 +129,12 @@ MONOIDS: dict[str, Monoid] = {
         "or",
         identity=lambda dt: jnp.zeros((), dt),
         combine=jnp.logical_or,
+        # ``> 0`` (not ``astype(bool)``): segment_max fills EMPTY segments
+        # with iinfo.min, which a bool cast would turn into True — the
+        # monoid law requires the identity (False) for empty folds.
         segment=lambda x, ids, num_segments, **kw: jax.ops.segment_max(
             x.astype(jnp.int32), ids, num_segments, **kw
-        ).astype(bool),
+        ) > 0,
     ),
 }
 

@@ -264,6 +264,58 @@ def test_run_batch_personalized_random_walk():
         )
 
 
+def test_run_batch_batch_aware_halting():
+    """The batched executable's scan sits OUTSIDE the query vmap, so
+    halting is a real ``cond`` on ``all(halted)``: a skewed-convergence
+    batch executes exactly as many superstep pairs as its slowest query
+    needs — not ``max_iters`` — while staying bitwise-equal to
+    sequential runs (results AND stats)."""
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    max_iters = 24
+    eng = Engine(collect_stats=True)
+    sources = np.arange(8, dtype=np.int32)
+
+    # sequential convergence profile: first zero-activity iteration + 1
+    # (the halting superstep itself reports zero and flips the flag)
+    seq = [
+        eng.run(shortest_paths_spec(hg, int(s), max_iters))
+        for s in sources
+    ]
+    def halt_iter(stats):
+        total = np.asarray(stats[0]) + np.asarray(stats[1])
+        zeros = np.flatnonzero(total == 0)
+        return (zeros[0] + 1) if len(zeros) else max_iters
+    slowest = max(halt_iter(r.superstep_stats) for r in seq)
+    assert slowest < max_iters, "pick a larger max_iters for this test"
+
+    compiled = eng.compile(shortest_paths_spec(hg, 0, max_iters))
+    res = compiled.run_batch(sources)
+    executed = int(np.asarray(res.supersteps_executed))
+    assert executed == slowest, (executed, slowest)
+    assert executed < max_iters
+
+    vb, heb = res.value
+    for i, r in enumerate(seq):
+        assert np.array_equal(
+            np.asarray(r.value[0]), np.asarray(vb[i]), equal_nan=True
+        )
+        assert np.array_equal(
+            np.asarray(r.value[1]), np.asarray(heb[i]), equal_nan=True
+        )
+        # per-query stats match the sequential trace bit for bit
+        for k in (0, 1):
+            assert np.array_equal(
+                np.asarray(r.superstep_stats[k]),
+                np.asarray(res.superstep_stats[k][i]),
+            )
+
+
+def test_unbatched_run_reports_no_executed_count():
+    hg = powerlaw_hypergraph(30, 20, mean_cardinality=3, seed=0)
+    res = Engine().compile(shortest_paths_spec(hg, 0, 8)).run()
+    assert res.supersteps_executed is None
+
+
 def test_run_batch_requires_query_axis():
     hg = powerlaw_hypergraph(20, 12, seed=0)
     compiled = Engine().compile(pagerank_spec(hg, iters=2))

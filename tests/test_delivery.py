@@ -1,0 +1,332 @@
+"""Fused incidence delivery: layout, kernels, engine seam, serving.
+
+The tentpole contracts, asserted:
+
+* **Kernel parity** (property-tested): both fused lowerings — the ELL +
+  sorted-COO XLA form and the Pallas kernel in interpret mode — equal
+  the reference gather/mask/segment path across monoids (sum, min, max,
+  or, prod), dtypes, dead-row masks, dynamic activity, empty segments
+  and padded buckets.  Equality is BITWISE: order-insensitive monoids
+  (min/max/or) on arbitrary values, sum/prod on integer-valued payloads
+  where every association order is exact.  (Float sums across different
+  reduce algorithms differ by reassociation; the tight-allclose case is
+  covered separately.)
+* **Engine seam**: ``delivery='pallas_fused'`` matches ``'xla'``
+  end-to-end through ``Engine.run`` and ``Engine.compile``; ``auto``
+  resolves via the cost model and reports its reasoning; non-monoid
+  specs fall back (auto) or raise (explicit).
+* **Distributed**: fused == reference on the replicated AND sharded
+  backends, padded (serving) and unpadded (one-shot), in a
+  forced-host-device subprocess.
+* **Batch-aware halting**: ``run_batch`` stops at the slowest query's
+  convergence — fewer supersteps than ``max_iters``, bitwise-equal
+  results (asserted in ``tests/test_compile.py``).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms import (
+    label_propagation_spec,
+    pagerank_spec,
+    shortest_paths_spec,
+)
+from repro.core import Engine
+from repro.core.api import Program
+from repro.core.engine import deliver
+from repro.core.executor import select_delivery
+from repro.data import powerlaw_hypergraph
+from repro.kernels.deliver import (
+    build_delivery_layout,
+    fused_deliver,
+    layout_pair,
+    plan_ell_width,
+)
+
+settings.register_profile("ci", max_examples=12, deadline=None)
+settings.load_profile("ci")
+
+MONOIDS_UNDER_TEST = ("sum", "min", "max", "or", "prod")
+
+
+@st.composite
+def incidence_case(draw):
+    """A random incidence list + messages: the deliver() input space."""
+    n_src = draw(st.integers(1, 60))
+    n_dst = draw(st.integers(1, 50))
+    nnz = draw(st.integers(0, 220))
+    seed = draw(st.integers(0, 100_000))
+    monoid = draw(st.sampled_from(MONOIDS_UNDER_TEST))
+    dtype = draw(st.sampled_from(["float32", "int32"]))
+    width = draw(st.sampled_from([(), (3,), (2, 2)]))
+    with_mask = draw(st.booleans())
+    with_active = draw(st.booleans())
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_src, nnz).astype(np.int32)
+    dst = rng.integers(0, n_dst, nnz).astype(np.int32)
+    mask = (
+        (rng.random(nnz) > 0.25).astype(np.float32) if with_mask else None
+    )
+    if monoid == "or":
+        msg = rng.random((n_src,) + width) > 0.5
+    elif dtype == "int32":
+        msg = rng.integers(-4, 5, (n_src,) + width).astype(np.int32)
+    else:
+        # Integer-valued float32: every association order is exact, so
+        # sum/prod parity is bitwise (the contract under test is the
+        # data path — which rows combine where — not fp rounding).
+        msg = rng.integers(-4, 5, (n_src,) + width).astype(np.float32)
+    active = rng.random(n_src) > 0.3 if with_active else None
+    return (src, dst, mask, n_src, n_dst, monoid, msg, active)
+
+
+@given(incidence_case())
+def test_fused_delivery_bitwise_equals_reference(case):
+    src, dst, mask, n_src, n_dst, monoid, msg, active = case
+    prog = Program(procedure=lambda *a: None, combiner=monoid)
+    act_j = jnp.asarray(active) if active is not None else None
+    ref = deliver(
+        jnp.asarray(msg), act_j, jnp.asarray(src), jnp.asarray(dst),
+        n_dst, prog,
+        e_mask=jnp.asarray(mask) if mask is not None else None,
+    )
+    layout = build_delivery_layout(
+        src, dst, mask, n_src, n_dst, block_n=8, block_e=16
+    )
+    for lowering in ("ell", "pallas_interpret"):
+        got = fused_deliver(
+            jnp.asarray(msg), act_j, layout, prog, lowering=lowering
+        )
+        assert np.array_equal(
+            np.asarray(ref), np.asarray(got), equal_nan=True
+        ), (monoid, lowering, msg.dtype)
+
+
+@given(incidence_case())
+def test_fused_delivery_padded_bucket_invariance(case):
+    """Padding the sorted lanes to a larger bucket (the serving path's
+    ``pad_sorted_to``) must not change any result."""
+    src, dst, mask, n_src, n_dst, monoid, msg, active = case
+    prog = Program(procedure=lambda *a: None, combiner=monoid)
+    act_j = jnp.asarray(active) if active is not None else None
+    base = build_delivery_layout(
+        src, dst, mask, n_src, n_dst, block_n=8, block_e=16
+    )
+    padded = build_delivery_layout(
+        src, dst, mask, n_src, n_dst, block_n=8, block_e=16,
+        pad_sorted_to=len(src) + 37,
+    )
+    a = fused_deliver(jnp.asarray(msg), act_j, base, prog, lowering="ell")
+    b = fused_deliver(jnp.asarray(msg), act_j, padded, prog, lowering="ell")
+    assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+
+
+def test_fused_float_sum_within_reassociation_tolerance():
+    """Arbitrary float sums: the fused dense reduce reassociates, so
+    parity is tight-allclose, not bitwise."""
+    rng = np.random.default_rng(7)
+    n_src, n_dst, nnz = 200, 90, 4000
+    src = rng.integers(0, n_src, nnz).astype(np.int32)
+    dst = rng.integers(0, n_dst, nnz).astype(np.int32)
+    msg = rng.standard_normal((n_src, 4)).astype(np.float32)
+    prog = Program(procedure=lambda *a: None, combiner="sum")
+    ref = deliver(
+        jnp.asarray(msg), None, jnp.asarray(src), jnp.asarray(dst),
+        n_dst, prog,
+    )
+    layout = build_delivery_layout(src, dst, None, n_src, n_dst)
+    for lowering in ("ell", "pallas_interpret"):
+        got = fused_deliver(
+            jnp.asarray(msg), None, layout, prog, lowering=lowering
+        )
+        np.testing.assert_allclose(
+            np.asarray(ref), np.asarray(got), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_plan_ell_width_remainder_rule():
+    deg = np.array([1, 1, 2, 40])
+    k, rem = plan_ell_width(deg, int(deg.sum()))
+    # k grows until <= 25% of incidences overflow (cap 64)
+    assert rem <= 0.25 * deg.sum()
+    assert k & (k - 1) == 0  # power of two
+    k_uniform, rem_uniform = plan_ell_width(np.full(16, 4), 64)
+    assert (k_uniform, rem_uniform) == (4, 0)
+
+
+# --------------------------------------------------------------------------
+# the Engine seam
+# --------------------------------------------------------------------------
+
+def medium_hypergraph():
+    # Large enough to clear the cost model's FUSED_MIN_NNZ floor.
+    return powerlaw_hypergraph(1400, 1000, mean_cardinality=7, seed=3)
+
+
+@pytest.mark.parametrize("make_spec,bitwise", [
+    (lambda hg: shortest_paths_spec(hg, 0, 12), True),
+    (lambda hg: label_propagation_spec(hg, iters=6), True),
+    (lambda hg: pagerank_spec(hg, iters=6), False),
+])
+def test_engine_run_fused_matches_xla(make_spec, bitwise):
+    hg = medium_hypergraph()
+    eng = Engine()
+    spec = make_spec(hg)
+    ref = eng.run(spec, delivery="xla").value
+    got = eng.run(spec, delivery="pallas_fused").value
+    for a, b in zip(ref, got):
+        a, b = np.asarray(a), np.asarray(b)
+        if bitwise:
+            assert np.array_equal(a, b, equal_nan=True)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_compiled_fused_matches_xla_and_masks_padding():
+    hg = medium_hypergraph()
+    eng = Engine(collect_stats=True)
+    spec = shortest_paths_spec(hg, 0, 12)
+    ref = eng.compile(spec, delivery="xla").run()
+    got = eng.compile(spec, delivery="pallas_fused").run()
+    for a, b in zip(ref.value, got.value):
+        assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+    # bucket padding must stay invisible in stats on the fused path too
+    for r, g in zip(ref.superstep_stats, got.superstep_stats):
+        assert np.array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_delivery_auto_resolves_and_reports():
+    """The cost model picks fused for a large narrow-message hypergraph
+    and reports the numbers it decided on."""
+    hg = medium_hypergraph()
+    eng = Engine()
+    cfg, _, decision = eng.resolve(shortest_paths_spec(hg, 0, 8))
+    why = decision["delivery"]
+    assert cfg.delivery == "pallas_fused", why
+    assert why["lowering"] in ("ell", "pallas", "pallas_interpret")
+    assert "reason" in why and "message_width_bytes" in why
+
+    # tiny structures stay on the reference path (overhead-dominated)
+    tiny = powerlaw_hypergraph(30, 20, mean_cardinality=3, seed=0)
+    cfg2, _, dec2 = eng.resolve(shortest_paths_spec(tiny, 0, 8))
+    assert cfg2.delivery == "xla"
+
+
+def test_delivery_auto_rejects_wide_messages_on_ell():
+    """Wide message rows flip the ELL cost model back to the reference
+    path (the dense reduce's padding outweighs the scatter win)."""
+    hg = medium_hypergraph()
+    spec = pagerank_spec(hg, iters=4)
+    wide = spec._replace(initial_msg=jnp.zeros((64,), jnp.float32))
+    choice, why = select_delivery(wide, hg)
+    assert choice == "xla"
+    assert "wide" in why["reason"]
+
+
+def test_non_monoid_spec_falls_back_and_explicit_raises():
+    hg = powerlaw_hypergraph(60, 40, mean_cardinality=4, seed=1)
+    spec = pagerank_spec(hg, iters=4)
+    # graft a custom (Seq) reducer onto the vertex program: the fused
+    # path must refuse it — reducers consume materialized rows.
+    seq_reducer = lambda rows, dst, n, live: jax.tree.map(
+        lambda r: jax.ops.segment_sum(r, dst, n), rows
+    )
+    import dataclasses as dc
+
+    spec = spec._replace(
+        v_program=dc.replace(spec.v_program, reducer=seq_reducer)
+    )
+    eng = Engine()
+    cfg, _, decision = eng.resolve(spec)
+    assert cfg.delivery == "xla"
+    assert "non-monoid" in decision["delivery"]["reason"]
+    with pytest.raises(ValueError, match="monoid"):
+        eng.resolve(spec, delivery="pallas_fused")
+
+
+def test_delivery_layouts_cached_per_structure():
+    hg = medium_hypergraph()
+    eng = Engine()
+    spec = shortest_paths_spec(hg, 0, 8)
+    eng.run(spec, delivery="pallas_fused")
+    lay1 = eng._delivery_layouts(hg)
+    eng.run(spec, delivery="pallas_fused")
+    assert eng._delivery_layouts(hg) is lay1  # identity-cached
+
+
+def test_layout_pair_directions():
+    hg = powerlaw_hypergraph(50, 30, mean_cardinality=4, seed=2)
+    fwd, bwd = layout_pair(
+        hg.src, hg.dst, hg.e_mask, hg.n_vertices, hg.n_hyperedges
+    )
+    assert (fwd.n_src, fwd.n_dst) == (hg.n_vertices, hg.n_hyperedges)
+    assert (bwd.n_src, bwd.n_dst) == (hg.n_hyperedges, hg.n_vertices)
+    assert fwd.nnz == bwd.nnz == hg.nnz
+
+
+# --------------------------------------------------------------------------
+# distributed: fused == reference on both backends (subprocess)
+# --------------------------------------------------------------------------
+
+DISTRIBUTED_FUSED = textwrap.dedent("""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.core import Engine
+    from repro.data import powerlaw_hypergraph
+    from repro.algorithms import shortest_paths_spec, pagerank_spec
+
+    mesh = Mesh(np.array(jax.devices()).reshape(4), ('data',))
+    hg = powerlaw_hypergraph(90, 70, mean_cardinality=5, seed=0)
+    local = Engine()
+    for backend in ('replicated', 'sharded'):
+        eng = Engine(mesh=mesh, backend=backend)
+        # min monoid: one-shot (unpadded) run, bitwise vs local xla
+        ref = local.run(shortest_paths_spec(hg, 1, 12), delivery='xla')
+        got = eng.run(shortest_paths_spec(hg, 1, 12),
+                      delivery='pallas_fused')
+        for a, b in zip(ref.value, got.value):
+            assert np.array_equal(np.asarray(a), np.asarray(b),
+                                  equal_nan=True), backend
+        # sum monoid: reassociation tolerance
+        refp = local.run(pagerank_spec(hg, iters=6), delivery='xla')
+        gotp = eng.run(pagerank_spec(hg, iters=6),
+                       delivery='pallas_fused')
+        for a, b in zip(refp.value, gotp.value):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+        # compiled (bucket-PADDED) fused serving, batched: bitwise vs
+        # sequential local, and executed on the distributed executable
+        compiled = eng.compile(shortest_paths_spec(hg, 0, 12),
+                               delivery='pallas_fused')
+        sources = np.arange(6, dtype=np.int32)
+        vb, heb = compiled.run_batch(sources).value
+        for i, s in enumerate(sources):
+            r = local.run(shortest_paths_spec(hg, int(s), 12)).value
+            assert np.array_equal(np.asarray(r[0]), np.asarray(vb[i]),
+                                  equal_nan=True), (backend, i)
+            assert np.array_equal(np.asarray(r[1]), np.asarray(heb[i]),
+                                  equal_nan=True), (backend, i)
+    print('FUSED_DISTRIBUTED_AGREES')
+""")
+
+
+def test_distributed_fused_subprocess():
+    # Inherit the full environment (dropping JAX_PLATFORMS makes jax
+    # probe for accelerator platforms — minutes of stall per child).
+    proc = subprocess.run(
+        [sys.executable, "-c", DISTRIBUTED_FUSED],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "FUSED_DISTRIBUTED_AGREES" in proc.stdout

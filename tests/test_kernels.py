@@ -44,6 +44,27 @@ def test_segsum_empty_and_single_segment():
     np.testing.assert_allclose(got[1:], 0.0)
 
 
+@pytest.mark.parametrize("e,n,d", [
+    (256, 64, 32), (1000, 300, 8), (77, 13, 8), (512, 17, 16),
+])
+def test_segsum_sorted_block_skip(e, n, d):
+    """dst-SORTED inputs through the block-sparse skip (per-tile CSR
+    block bounds, scalar-prefetched) == the full-sweep fallback == the
+    jnp oracle."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(e * n))
+    msgs = jax.random.normal(k1, (e, d), jnp.float32)
+    dst = jnp.sort(jax.random.randint(k2, (e,), 0, n))
+    got = segment_sum_mxu(msgs, dst, n, sorted_dst=True,
+                          block_n=64, block_e=128, interpret=True)
+    full = segment_sum_mxu(msgs, dst, n, sorted_dst=False,
+                           block_n=64, block_e=128, interpret=True)
+    want = segment_sum_ref(msgs, dst, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # skip path == sweep path exactly (same blocks, same order)
+    assert np.array_equal(np.asarray(got), np.asarray(full))
+
+
 @pytest.mark.parametrize("b,h,s,d", [
     (2, 3, 256, 64), (1, 2, 128, 32), (2, 2, 384, 64), (1, 1, 128, 128),
 ])
@@ -73,12 +94,15 @@ def test_flash_unpadded_vs_padded_sequence():
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("fused", [True, False])
 @pytest.mark.parametrize("n_pairs,n_edges,n_vertices", [
     (100, 40, 64), (1000, 300, 500), (37, 5, 2000), (513, 64, 31),
 ])
-def test_isect_bitset_sweep(n_pairs, n_edges, n_vertices):
+def test_isect_bitset_sweep(n_pairs, n_edges, n_vertices, fused):
     """Blocked AND+popcount pair-intersection kernel vs the
-    population_count oracle (and the SWAR popcount inside it)."""
+    population_count oracle (and the SWAR popcount inside it), in both
+    forms: in-kernel scalar-prefetch row gather (fused) and the
+    pre-gathered reference."""
     from repro.data import powerlaw_hypergraph
     from repro.motifs import build_index
 
@@ -91,7 +115,25 @@ def test_isect_bitset_sweep(n_pairs, n_edges, n_vertices):
     ea = jax.random.randint(k1, (n_pairs,), 0, n_edges)
     eb = jax.random.randint(k2, (n_pairs,), 0, n_edges)
     got = pair_intersect_bitset(
-        bits, ea, eb, block_p=128, block_w=4, interpret=True
+        bits, ea, eb, block_p=128, block_w=4, fused=fused,
+        interpret=True,
+    )
+    want = pair_intersect_ref(bits, ea, eb)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_isect_fused_skewed_hot_rows():
+    """Skewed pair batches (every pair hits the same hot rows) — the
+    fused gather's motivating regime."""
+    from repro.data import powerlaw_hypergraph
+    from repro.motifs import build_index
+
+    hg = powerlaw_hypergraph(300, 64, mean_cardinality=6, seed=9)
+    bits = build_index(hg, "bitset").data
+    ea = jnp.zeros((700,), jnp.int32)          # one hot row vs all
+    eb = jnp.arange(700, dtype=jnp.int32) % 64
+    got = pair_intersect_bitset(
+        bits, ea, eb, block_p=128, block_w=4, fused=True, interpret=True
     )
     want = pair_intersect_ref(bits, ea, eb)
     assert np.array_equal(np.asarray(got), np.asarray(want))
