@@ -34,7 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 from repro.core.api import Program, constant_initial_msg
-from repro.core.engine import _as_out
+from repro.core.engine import _as_out, batch_halting_scan
 from repro.core.hypergraph import HyperGraph
 from repro.partition.base import PartitionPlan
 
@@ -298,25 +298,38 @@ def _superstep_sharded(ctx: DistContext, hg_meta, programs, degs,
 def _stack_layouts(layouts):
     """Stack per-partition ``DeliveryLayout``s along a new leading axis
     (the shard_map operand form).  Callers guarantee uniform shapes
-    (same k / remainder pad / tile geometry); ``max_blocks`` — a static
-    grid extent — takes the max so one kernel serves every shard."""
+    (one shared class plan, harmonized per-class row/edge/remainder
+    pads); the static grid extents (``class_max_blocks``) and the
+    residual-skip count (``rem_nnz``) take the max so one kernel
+    serves every shard."""
     from repro.kernels.deliver import DeliveryLayout
 
     ref = layouts[0]
+    n_classes = ref.n_classes
     stack = lambda get: jnp.stack([get(l) for l in layouts])
+    per_class = lambda get: tuple(
+        stack(lambda l, c=c: get(l, c)) for c in range(n_classes)
+    )
     return DeliveryLayout(
-        sorted_src=stack(lambda l: l.sorted_src),
-        sorted_dst=stack(lambda l: l.sorted_dst),
-        ell_idx=stack(lambda l: l.ell_idx),
+        class_ell=per_class(lambda l, c: l.class_ell[c]),
+        class_src=per_class(lambda l, c: l.class_src[c]),
+        class_dst=per_class(lambda l, c: l.class_dst[c]),
+        class_bounds=per_class(lambda l, c: l.class_bounds[c]),
+        inv_perm=stack(lambda l: l.inv_perm),
         rem_src=stack(lambda l: l.rem_src),
         rem_dst=stack(lambda l: l.rem_dst),
-        tile_bounds=stack(lambda l: l.tile_bounds),
         n_src=ref.n_src,
         n_dst=ref.n_dst,
         nnz=ref.nnz,
+        rem_nnz=max(l.rem_nnz for l in layouts),
+        class_widths=ref.class_widths,
+        class_rows=ref.class_rows,
         block_n=ref.block_n,
-        block_e=ref.block_e,
-        max_blocks=max(l.max_blocks for l in layouts),
+        class_block_e=ref.class_block_e,
+        class_max_blocks=tuple(
+            max(l.class_max_blocks[c] for l in layouts)
+            for c in range(n_classes)
+        ),
     )
 
 
@@ -325,15 +338,25 @@ def build_shard_delivery(shard_src, shard_dst, shard_mask,
     """Per-shard fused-delivery layouts for both half-superstep
     directions, over a plan's ``[n_parts, shard_len]`` edge shards.
 
-    Each shard gets its own dst-sorted CSR/ELL layout over the *full*
-    padded entity range (both backends combine into full-size buffers
-    before their cross-partition collective).  The data-dependent
-    shapes (ELL width, remainder pad) are harmonized across shards from
-    the per-shard live-degree histograms — cheap bincounts, no throwaway
-    layout build — so the layouts stack into one shard_map operand.
+    Each shard gets its own dst-sorted degree-class layout over the
+    *full* padded entity range (both backends combine into full-size
+    buffers before their cross-partition collective).  Class boundaries
+    and widths are planned ONCE per direction from the merged per-shard
+    live-degree histograms — every (shard, destination) pair is a row
+    the plan must place, so the DP sees the true row population — and
+    the remaining data-dependent shapes (per-class row counts, edge
+    lengths, remainder pad) are harmonized to per-class maxima across
+    shards.  Cheap bincounts, no throwaway layout build; the resulting
+    layouts stack into one shard_map operand.
     """
-    from repro.kernels.deliver import build_delivery_layout, plan_ell_width
-    from repro.kernels.deliver.layout import _PAD_FLOOR, _pow2_at_least
+    from repro.kernels.deliver import (
+        build_delivery_layout,
+        classify_degrees,
+        plan_degree_classes,
+    )
+    from repro.kernels.deliver.layout import (
+        _PAD_FLOOR, _ROW_FLOOR, _pow2_at_least,
+    )
 
     shard_src = np.asarray(shard_src)
     shard_dst = np.asarray(shard_dst)
@@ -343,23 +366,42 @@ def build_shard_delivery(shard_src, shard_dst, shard_mask,
     def direction(srcs, dsts, n_src, n_dst):
         live = shard_mask != 0
         degs = [
-            np.bincount(dsts[p][live[p]], minlength=max(n_dst, 1))
+            np.bincount(dsts[p][live[p]], minlength=max(n_dst, 1))[:n_dst]
             for p in range(n_parts)
         ]
-        k = max(
-            plan_ell_width(degs[p], int(live[p].sum()))[0]
-            for p in range(n_parts)
+        plan = plan_degree_classes(
+            np.concatenate(degs), int(live.sum())
         )
-        rem_pad = _pow2_at_least(
-            max(
-                max(int(np.maximum(d - k, 0).sum()) for d in degs), 1
-            ),
-            _PAD_FLOOR,
+        widths = np.asarray(plan.widths, np.int64)
+        n_classes = len(widths)
+        rows_max = np.zeros(n_classes, np.int64)
+        nnz_max = np.zeros(n_classes, np.int64)
+        rem_max = 0
+        for deg in degs:
+            cls = classify_degrees(deg, widths)
+            pos = cls >= 0
+            rows = np.bincount(cls[pos], minlength=n_classes)
+            nnz_c = np.bincount(
+                cls[pos], weights=deg[pos].astype(np.float64),
+                minlength=n_classes,
+            ).astype(np.int64)
+            np.maximum(rows_max, rows, out=rows_max)
+            np.maximum(nnz_max, nnz_c, out=nnz_max)
+            spill = int(
+                np.maximum(deg[pos] - widths[cls[pos]], 0).sum()
+            )
+            rem_max = max(rem_max, spill)
+        class_rows_pad = tuple(
+            _pow2_at_least(max(int(r), 1), _ROW_FLOOR) for r in rows_max
         )
+        rem_pad = _pow2_at_least(max(rem_max, 1), _PAD_FLOOR)
         final = [
             build_delivery_layout(
                 srcs[p], dsts[p], shard_mask[p], n_src, n_dst,
-                k=k, rem_pad_to=rem_pad,
+                plan=plan,
+                class_rows_pad=class_rows_pad,
+                class_nnz_pad=tuple(int(n) for n in nnz_max),
+                rem_pad_to=rem_pad,
             )
             for p in range(n_parts)
         ]
@@ -391,6 +433,7 @@ def build_distributed_runner(
     he_program: Program,
     max_iters: int,
     backend: str = "replicated",
+    batch: int | None = None,
 ):
     """Build the ``shard_map``-wrapped superstep scan for one design point.
 
@@ -408,6 +451,19 @@ def build_distributed_runner(
     ``build_shard_delivery`` pair of stacked per-shard layouts — the
     fused delivery design point, identical on both backends (each
     partition's local combine runs fused over its own edge block).
+
+    ``batch``: when set, state/msg operands carry a leading query batch
+    dim ``[batch, ...]`` and the runner is BATCH-AWARE (mirroring the
+    local ``compute_batch``): the per-iteration superstep vmaps over the
+    query axis INSIDE the ``shard_map`` scan, so halting stays a real
+    ``lax.cond`` on ``all(halted)`` across the batch — a
+    skewed-convergence batch stops at its slowest query instead of
+    paying ``max_iters``.  Returns ``(v_attr_b, he_attr_b, v_trace
+    [max_iters, batch], he_trace, supersteps_executed)``; per-query
+    results and stats are bitwise those of the unbatched runner (halted
+    queries freeze by selection — exactly what the vmapped
+    ``cond``-as-``select`` would have computed — and report zero
+    activity).
     """
     if backend == "replicated":
         state_spec = P()
@@ -418,6 +474,10 @@ def build_distributed_runner(
     else:
         raise ValueError(backend)
     deg_spec = state_spec
+    # Batched state shards the ENTITY dim, which sits after the query dim.
+    batch_state_spec = (
+        state_spec if backend == "replicated" else P(None, ctx.axis)
+    )
     edge_spec = P(ctx.axis)  # leading dim = n_parts, one row per partition
     programs = (v_program, he_program)
 
@@ -464,19 +524,62 @@ def build_distributed_runner(
         )
         return v_a, he_a, v_trace, he_trace
 
+    def run_batch(v_attr_b, he_attr_b, msg0_b, v_deg, he_card, src, dst,
+                  mask, nv_real, ne_real, delivery):
+        src, dst, mask = src[0], dst[0], mask[0]
+        delivery_local = (
+            jax.tree.map(lambda a: a[0], delivery)
+            if delivery is not None
+            else (None, None)
+        )
+        degs_local = (v_deg, he_card)
+
+        def one_step(step, v_a, he_a, msg):
+            # The superstep reads only shared structure besides the
+            # per-query state; collectives batch elementwise under vmap.
+            return superstep(
+                ctx, None, programs, degs_local,
+                step, v_a, he_a, msg, src, dst, mask,
+                nv_real, ne_real, delivery_local,
+            )
+
+        batched_step = jax.vmap(one_step, in_axes=(None, 0, 0, 0))
+
+        # The halting scaffold (freeze-by-selection, real cond on
+        # all(halted), executed counter) is the LOCAL backend's —
+        # shared so the executed counts agree by construction.
+        v_a, he_a, (v_tr, he_tr), executed = batch_halting_scan(
+            batched_step, v_attr_b, he_attr_b, msg0_b, batch, max_iters
+        )
+        return v_a, he_a, v_tr, he_tr, executed
+
     # replication checking off: the halt flag is partition-uniform by
     # construction, which 0.4.x check_rep cannot prove.  The activity
     # traces are likewise partition-uniform (psum'd / computed on the
     # replicated full-size buffers), so their out_spec is P().
+    if batch is None:
+        return _shard_map(
+            run,
+            mesh=mesh,
+            in_specs=(
+                state_spec, state_spec, state_spec, deg_spec, deg_spec,
+                edge_spec, edge_spec, edge_spec, P(), P(),
+                edge_spec,  # delivery layouts: tree prefix, [n_parts, ...]
+            ),
+            out_specs=(state_spec, state_spec, P(), P()),
+        )
     return _shard_map(
-        run,
+        run_batch,
         mesh=mesh,
         in_specs=(
-            state_spec, state_spec, state_spec, deg_spec, deg_spec,
+            batch_state_spec, batch_state_spec, batch_state_spec,
+            deg_spec, deg_spec,
             edge_spec, edge_spec, edge_spec, P(), P(),
-            edge_spec,  # delivery layouts: tree prefix, [n_parts, ...]
+            edge_spec,
         ),
-        out_specs=(state_spec, state_spec, P(), P()),
+        out_specs=(
+            batch_state_spec, batch_state_spec, P(), P(), P(),
+        ),
     )
 
 

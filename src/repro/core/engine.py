@@ -246,6 +246,82 @@ compute_jit = partial(jax.jit, static_argnames=("max_iters", "v_program",
                                                 "return_stats"))(compute)
 
 
+def batch_halting_scan(
+    batched_step,
+    v_attr_b: Pytree,
+    he_attr_b: Pytree,
+    msg0_b: Pytree,
+    batch: int,
+    max_iters: int,
+):
+    """The batch-aware halting scan shared by the local and distributed
+    batched executables.
+
+    ``batched_step(step, v_attr_b, he_attr_b, msg_b) -> (v_attr_b,
+    he_attr_b, msg_b, (v_active_b, he_active_b))`` is one vmapped
+    superstep pair over the query axis.  The scan wraps it in a REAL
+    ``lax.cond`` on ``all(halted)`` — once the last query converges the
+    remaining iterations are skipped — while preserving per-query
+    semantics bitwise: a halted query's state is frozen by selection
+    (exactly what the vmapped ``cond``-as-``select`` would compute) and
+    its activity counts report zero.  One definition, two callers
+    (``compute_batch`` and ``distributed.build_distributed_runner``),
+    so ``Result.supersteps_executed`` agrees across backends by
+    construction.
+
+    Returns ``(v_attr_b, he_attr_b, (v_trace, he_trace) [max_iters,
+    batch], supersteps_executed)``.
+    """
+
+    def select(halted_b, old, new):
+        def one(o, n):
+            m = halted_b.reshape((batch,) + (1,) * (o.ndim - 1))
+            return jnp.where(m, o, n)
+        return jax.tree.map(one, old, new)
+
+    def body(carry, _):
+        step, v_a, he_a, msg, halted_b, executed = carry
+        zero_b = jnp.zeros((batch,), jnp.int32)
+
+        def run(args):
+            step, v_a, he_a, msg, halted_b, executed = args
+            nv_a, nhe_a, nmsg, stats = batched_step(step, v_a, he_a, msg)
+            v_act = jnp.where(halted_b, 0, stats[0])
+            he_act = jnp.where(halted_b, 0, stats[1])
+            now_halted = halted_b | ((v_act + he_act) == 0)
+            return (
+                select(halted_b, v_a, nv_a),
+                select(halted_b, he_a, nhe_a),
+                select(halted_b, msg, nmsg),
+                now_halted,
+                executed + 1,
+                (v_act, he_act),
+            )
+
+        def skip(args):
+            _, v_a, he_a, msg, halted_b, executed = args
+            return v_a, he_a, msg, halted_b, executed, (zero_b, zero_b)
+
+        nv_a, nhe_a, nmsg, halted2, executed, stats = jax.lax.cond(
+            halted_b.all(), skip, run,
+            (step, v_a, he_a, msg, halted_b, executed),
+        )
+        return (step + 2, nv_a, nhe_a, nmsg, halted2, executed), stats
+
+    init = (
+        jnp.asarray(0, jnp.int32),
+        v_attr_b,
+        he_attr_b,
+        msg0_b,
+        jnp.zeros((batch,), bool),
+        jnp.asarray(0, jnp.int32),
+    )
+    (_, v_a, he_a, _, _, executed), traces = jax.lax.scan(
+        body, init, None, length=max_iters
+    )
+    return v_a, he_a, traces, executed
+
+
 def compute_batch(
     hg: HyperGraph,
     v_attr_b: Pytree,
@@ -299,51 +375,8 @@ def compute_batch(
 
     batched_step = jax.vmap(one_step, in_axes=(None, 0, 0, 0))
 
-    def select(halted_b, old, new):
-        def one(o, n):
-            m = halted_b.reshape((batch,) + (1,) * (o.ndim - 1))
-            return jnp.where(m, o, n)
-        return jax.tree.map(one, old, new)
-
-    def body(carry, _):
-        step, v_a, he_a, msg, halted_b, executed = carry
-        zero_b = jnp.zeros((batch,), jnp.int32)
-
-        def run(args):
-            step, v_a, he_a, msg, halted_b, executed = args
-            nv_a, nhe_a, nmsg, stats = batched_step(step, v_a, he_a, msg)
-            v_act = jnp.where(halted_b, 0, stats.v_active)
-            he_act = jnp.where(halted_b, 0, stats.he_active)
-            now_halted = halted_b | ((v_act + he_act) == 0)
-            return (
-                select(halted_b, v_a, nv_a),
-                select(halted_b, he_a, nhe_a),
-                select(halted_b, msg, nmsg),
-                now_halted,
-                executed + 1,
-                (v_act, he_act),
-            )
-
-        def skip(args):
-            _, v_a, he_a, msg, halted_b, executed = args
-            return v_a, he_a, msg, halted_b, executed, (zero_b, zero_b)
-
-        nv_a, nhe_a, nmsg, halted2, executed, stats = jax.lax.cond(
-            halted_b.all(), skip, run,
-            (step, v_a, he_a, msg, halted_b, executed),
-        )
-        return (step + 2, nv_a, nhe_a, nmsg, halted2, executed), stats
-
-    init = (
-        jnp.asarray(0, jnp.int32),
-        v_attr_b,
-        he_attr_b,
-        msg0_b,
-        jnp.zeros((batch,), bool),
-        jnp.asarray(0, jnp.int32),
-    )
-    (_, v_a, he_a, _, _, executed), (v_tr, he_tr) = jax.lax.scan(
-        body, init, None, length=max_iters
+    v_a, he_a, (v_tr, he_tr), executed = batch_halting_scan(
+        batched_step, v_attr_b, he_attr_b, msg0_b, batch, max_iters
     )
     # [max_iters, batch] -> [batch, max_iters]: match the vmap layout
     # callers already consume.

@@ -38,6 +38,7 @@ from repro.core.hypergraph import HyperGraph
 from repro.kernels.deliver import (
     DELIVERY_MODES,
     layout_pair,
+    plan_degree_classes,
     plan_ell_width,
     select_lowering,
 )
@@ -96,11 +97,12 @@ class ExecutionConfig:
       delivery: ``xla`` | ``pallas_fused`` | ``auto`` — the
         deliver/combine data path of every half-superstep.  ``xla`` is
         the reference gather -> mask -> segment-reduce;
-        ``pallas_fused`` precomputes a dst-sorted CSR layout once per
-        structure (``repro.kernels.deliver``) and fuses gather, mask
-        and combine so the ``[nnz, D]`` intermediate never hits HBM.
-        ``auto`` resolves via ``select_delivery``'s cost model (message
-        width, degree skew via the ELL overflow, nnz, platform
+        ``pallas_fused`` precomputes a dst-sorted degree-class
+        (sliced-ELL) layout once per structure
+        (``repro.kernels.deliver``) and fuses gather, mask and combine
+        so the ``[nnz, D]`` intermediate never hits HBM.  ``auto``
+        resolves via ``select_delivery``'s cost model (message width,
+        degree skew via the class plan's padding work, nnz, platform
         lowering), falling back to ``xla`` for custom ``reducer``s and
         per-incidence ``edge_transform``s — the non-monoid paths the
         fused kernel cannot legally take.
@@ -388,13 +390,19 @@ def select_partition(
 
 # Fused-delivery cost model constants (ELL lowering; see
 # ``select_delivery``).  Calibrated on ``benchmarks/bench_delivery.py``:
-# the dense ELL reduce beats XLA's serialized scatter decisively for
-# narrow messages (19x bounded-degree, ~3x zipf-skew — the capped ELL
-# plus the dst-sorted overflow absorbs heavy tails), while wide rows —
-# where the reference gather/scatter already vectorizes — favor the
-# reference path.
+# the degree-class (sliced-ELL) dense reduces beat XLA's serialized
+# scatter decisively for messages up to ``FUSED_MAX_WIDTH_BYTES``
+# regardless of skew — per-class widths keep hubs dense, so zipf skew
+# no longer bleeds into an overflow scatter.  The 64-byte zipf point
+# (``wide_highskew``) is the regime the class layout flipped: the PR-4
+# single-ELL packing measured a ~2x LOSS to the reference there (its
+# capped width spilled over half the incidences into the sorted
+# scatter); the class layout wins it ~1.3x (2.7x over single-ELL).
+# Past the width cap the reference gather/scatter already vectorizes
+# and the dense tables' padded row traffic (and cache footprint)
+# multiplies with width — measured losses at every skew on XLA hosts.
 FUSED_MAX_WIDTH_BYTES = 64.0    # per-entity message bytes
-FUSED_ELL_WORK_BUDGET = 4.0     # padded ELL rows per real incidence
+FUSED_ELL_WORK_BUDGET = 4.0     # padded ELL slots per real incidence
 # Below this the layout/dispatch overheads swamp any kernel win AND the
 # decision would be noise-sensitive (same-bucket graphs flipping design
 # points for sub-ms executions); auto stays on the reference path.
@@ -436,13 +444,26 @@ def select_delivery(spec, hg: HyperGraph) -> tuple[str, dict]:
       once per incident edge instead of gather+mask+re-read (~3x HBM
       traffic) — always projected to win on the monoid path.
     * ``ell`` (XLA hosts): the win comes from replacing the serialized
-      scatter with a dense reduce, and dies by padding.  Pick fused
-      only while (a) the message row is narrow
-      (``FUSED_MAX_WIDTH_BYTES``) and (b) ELL padding is bounded
-      (``FUSED_ELL_WORK_BUDGET`` padded rows per incidence, both
-      directions — ``plan_ell_width``'s cap keeps heavy-tailed degree
-      skew here too: overflow rides the dst-sorted remainder, which
-      still measures ~3x over the reference on zipf skew).
+      scatter with dense reduces, and dies by padding.  The padding
+      term is the degree-class plan's summed work
+      (``plan_degree_classes`` over both directions' live-degree
+      histograms — dense slots at the builder's pow2 row padding
+      (``ClassPlan.built_work``) plus residual; exactly what a layout
+      built by the LOCAL builder allocates, so model and builder
+      cannot disagree there.  The distributed builder plans from
+      merged per-shard histograms and harmonizes pads to shard maxima,
+      so its realized padded work can exceed this estimate on
+      shard-skewed cuts — the budget is a lower bound in that case).
+      Pick
+      fused while (a) class padding is bounded
+      (``FUSED_ELL_WORK_BUDGET`` slots per incidence, both directions)
+      and (b) the message row is within ``FUSED_MAX_WIDTH_BYTES`` —
+      a boundary the class layout MOVED: at 64-byte rows under zipf
+      skew the PR-4 single-ELL packing measured a ~2x loss to the
+      reference (overflow scatter), while per-class widths keep hubs
+      dense and win the regime.  The reported ``skew_gain`` (single-ELL
+      vs class plan, residual-weighted) quantifies how much of the
+      decision the degree classes carry.
     """
     reason = _non_monoid_reason(spec)
     why: dict[str, Any] = {}
@@ -482,32 +503,61 @@ def select_delivery(spec, hg: HyperGraph) -> tuple[str, dict]:
         )
         return "xla", why
 
-    ell_work = 0.0
-    remainder = 0
-    for n_dst, ids in ((hg.n_hyperedges, dst), (hg.n_vertices, src)):
+    from repro.kernels.deliver.layout import RESIDUAL_WEIGHT
+
+    class_work = 0.0
+    class_weighted = 0.0
+    single_weighted = 0.0
+    residual = 0
+    plans = {}
+    for side, n_dst, ids in (
+        ("fwd", hg.n_hyperedges, dst), ("bwd", hg.n_vertices, src)
+    ):
         deg = np.bincount(ids, minlength=n_dst)
-        k, rem = plan_ell_width(deg, nnz)
-        ell_work += float(n_dst * k + rem)
-        remainder = max(remainder, rem)
+        plan = plan_degree_classes(deg, nnz)
+        k1, rem1 = plan_ell_width(deg, nnz)
+        # built_work: dense slots at the builder's pow2 row padding —
+        # the work the layout will really do, not the DP's tight count.
+        class_work += float(plan.built_work)
+        class_weighted += float(
+            plan.built_work - plan.residual
+            + RESIDUAL_WEIGHT * plan.residual
+        )
+        single_weighted += float(n_dst * k1 + RESIDUAL_WEIGHT * rem1)
+        residual = max(residual, plan.residual)
+        plans[side] = {
+            "widths": plan.widths, "rows": plan.rows,
+            "residual": plan.residual,
+        }
+    # Residual lanes pay the serialized sorted segment reduce, dense
+    # slots a vectorized reduce — compare plans on the weighted scale
+    # the DP itself optimizes.
+    skew_gain = single_weighted / max(class_weighted, 1.0)
     why.update(
         nnz=nnz,
-        ell_work_rows=ell_work,
-        ell_work_budget=FUSED_ELL_WORK_BUDGET * 2 * nnz,
-        remainder=remainder,
+        class_work_slots=class_work,
+        class_weighted_work=class_weighted,
+        single_ell_weighted_work=single_weighted,
+        skew_gain=skew_gain,
+        work_budget=FUSED_ELL_WORK_BUDGET * 2 * nnz,
+        residual=residual,
         width_budget=FUSED_MAX_WIDTH_BYTES,
+        class_plans=plans,
     )
+    if class_work > FUSED_ELL_WORK_BUDGET * 2 * nnz:
+        why["reason"] = "degree-class padding exceeds the work budget"
+        return "xla", why
     if width > FUSED_MAX_WIDTH_BYTES:
         why["reason"] = (
             "wide message rows: the reference gather/scatter already "
-            "vectorizes; ELL padding would add traffic"
+            "vectorizes; class-table row traffic multiplies with width"
         )
         return "xla", why
-    if ell_work > FUSED_ELL_WORK_BUDGET * 2 * nnz:
-        why["reason"] = "ELL padding exceeds the work budget"
-        return "xla", why
     why["reason"] = (
-        "narrow messages, bounded ELL padding: dense reduce beats the "
-        "serialized scatter"
+        "degree-class dense reduces beat the serialized scatter "
+        + ("(skewed degrees: per-class widths keep hubs dense)"
+           if skew_gain >= 1.4
+           else "(bounded class padding)")
     )
     return "pallas_fused", why
 

@@ -239,11 +239,13 @@ def _build_distributed_executable(
 ):
     """Same contract as the local builder, plus the plan's padded edge
     shards: ``(hgp, shard_src, shard_dst, shard_mask, delivery, nv_real,
-    ne_real, query) -> (v_attr, he_attr, stats, None)``.  Query binding
-    happens on the full padded state *before* ``shard_map`` shards it,
-    so one runner serves both backends' layouts.  Batches vmap the whole
-    runner (batch-aware halting is a local-backend feature for now: the
-    distributed scan lives inside ``shard_map``)."""
+    ne_real, query) -> (v_attr, he_attr, stats, executed)``.  Query
+    binding happens on the full padded state *before* ``shard_map``
+    shards it, so one runner serves both backends' layouts.  Batches run
+    the BATCH-AWARE runner (``build_distributed_runner(batch=...)``):
+    the scan sits outside the query vmap — inside ``shard_map`` — so
+    halting stays a real ``cond`` on ``all(halted)`` and
+    ``supersteps_executed`` agrees with the local backend."""
     from repro.core.distributed import DistContext, build_distributed_runner
 
     ctx = DistContext(
@@ -251,7 +253,7 @@ def _build_distributed_executable(
     )
     mapped = build_distributed_runner(
         mesh, ctx, spec.v_program, spec.he_program, cfg.max_iters,
-        backend=cfg.backend,
+        backend=cfg.backend, batch=batch_pad,
     )
     # As in the local builder: keep the spec's hg0 out of the closure.
     initial_msg, bind_query = spec.initial_msg, spec.bind_query
@@ -271,12 +273,29 @@ def _build_distributed_executable(
         stats = (v_trace, he_trace) if collect_stats else None
         return v_out, he_out, stats, None
 
-    fn = raw
-    if batch_pad is not None:
-        fn = jax.vmap(
-            raw, in_axes=(None, None, None, None, None, None, None, 0)
+    def raw_batch(hgp: HyperGraph, s_src, s_dst, s_mask, delivery,
+                  nv_real, ne_real, queries):
+        trace_hook()
+        # Bind every query onto the padded structure, keep only the
+        # per-query attribute states (the structure itself is shared) —
+        # same contract as the local batch builder: bind_query may only
+        # touch v_attr / he_attr.
+        bound = jax.vmap(lambda q: bind_query(hgp, q))(queries)
+        msg0 = constant_initial_msg(initial_msg, nv_pad)
+        msg0_b = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (batch_pad,) + x.shape), msg0
         )
-    return jax.jit(fn)
+        v_b, he_b, v_tr, he_tr, executed = mapped(
+            bound.v_attr, bound.he_attr, msg0_b,
+            hgp.degrees(), hgp.cardinalities(),
+            s_src, s_dst, s_mask, nv_real, ne_real, delivery,
+        )
+        # [max_iters, batch] -> [batch, max_iters]: the layout callers
+        # (and the local backend) already consume.
+        stats = (v_tr.T, he_tr.T) if collect_stats else None
+        return v_b, he_b, stats, executed
+
+    return jax.jit(raw if batch_pad is None else raw_batch)
 
 
 def _pad_shards(plan, shard_len_pad: int):

@@ -23,11 +23,17 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.deliver.fused import deliver_fused_pallas
+from repro.kernels.deliver.fused import (
+    deliver_fused_classes,
+    deliver_fused_pallas,
+)
 from repro.kernels.deliver.layout import (
+    ClassPlan,
     DeliveryLayout,
     build_delivery_layout,
+    classify_degrees,
     layout_pair,
+    plan_degree_classes,
     plan_ell_width,
     tile_block_bounds,
 )
@@ -36,12 +42,16 @@ from repro.sparse.segment import MONOIDS
 
 __all__ = [
     "DELIVERY_MODES",
+    "ClassPlan",
     "DeliveryLayout",
     "build_delivery_layout",
+    "classify_degrees",
     "deliver_ell_leaf",
+    "deliver_fused_classes",
     "deliver_fused_pallas",
     "fused_deliver",
     "layout_pair",
+    "plan_degree_classes",
     "plan_ell_width",
     "select_lowering",
     "tile_block_bounds",
@@ -67,7 +77,7 @@ def select_lowering() -> str:
 
 
 def _pallas_leaf(leaf, layout, monoid, active, *, interpret):
-    """Shape-normalize one leaf for the 2-D Pallas kernel."""
+    """Shape-normalize one leaf for the per-class 2-D Pallas kernels."""
     shape = leaf.shape
     msgs2d = leaf.reshape(shape[0], -1)
     if monoid.name == "or":
@@ -83,25 +93,13 @@ def _pallas_leaf(leaf, layout, monoid, active, *, interpret):
     msgs_aug = jnp.concatenate(
         [msgs2d, jnp.full((1, msgs2d.shape[1]), ident, msgs2d.dtype)]
     )
+    act_aug = None
     if active is not None:
         act_aug = jnp.concatenate(
             [active.astype(jnp.int32), jnp.ones((1,), jnp.int32)]
         )
-        live = jnp.take(act_aug, layout.sorted_src, axis=0)
-    else:
-        live = jnp.ones_like(layout.sorted_src)
-    out = deliver_fused_pallas(
-        msgs_aug,
-        layout.sorted_src,
-        layout.sorted_dst,
-        live,
-        layout.tile_bounds,
-        layout.n_dst,
-        monoid.name,
-        layout.max_blocks,
-        block_n=layout.block_n,
-        block_e=layout.block_e,
-        interpret=interpret,
+    out = deliver_fused_classes(
+        msgs_aug, act_aug, layout, monoid.name, interpret=interpret
     )
     return out.reshape((layout.n_dst,) + shape[1:])
 

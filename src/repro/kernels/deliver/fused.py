@@ -1,5 +1,5 @@
 """Fused incidence delivery: gather + mask + segment-combine in one
-Pallas kernel over a dst-sorted CSR layout.
+Pallas kernel over a dst-sorted, degree-classed CSR layout.
 
 The reference delivery path (gather -> ``where`` mask -> segment reduce)
 materializes a ``[nnz, D]`` rows array in HBM and re-reads it — ~3x the
@@ -29,8 +29,17 @@ granularity) gives each tile its first edge block and block count, so a
 tile only ever reads its incident edges — unlike the segsum kernel's
 full j-sweep, work scales with the tile's degree sum, not with nnz.
 
-Static liveness (``e_mask``) is folded into the layout (dead lanes
-gather the appended identity row); only the dynamic ``active`` vector
+Degree classes (``deliver_fused_classes``): heavy-tailed degree
+distributions inflate a single grid's ``max_blocks`` to the hub tile's
+block count — every tail tile then pays the hub's grid extent in
+skipped steps.  The degree-class layout runs ONE ``pallas_call`` per
+class over the class's own destination rows, with class-local
+``block_e`` and ``max_blocks``; the per-class partial outputs
+concatenate and assemble through the layout's ``inv_perm`` gather.
+The CSR form has no width cap, so the Pallas path needs no residual.
+
+Static liveness (``e_mask``) is folded into the layout (dead lanes are
+dropped from the class edge lists); only the dynamic ``active`` vector
 costs a per-edge mask at runtime.
 
 The kernel is written for TPU (scalar prefetch via
@@ -137,8 +146,9 @@ def deliver_fused_pallas(
     live: ``[nnz_pad]`` int32 — dynamic activity per lane (1 = live).
     tile_bounds: ``[n_tiles, 2]`` int32 (first block, n blocks) per
       ``block_n``-destination tile — scalar-prefetched for the skip.
-    max_blocks: static grid extent — the widest tile's block count
-      (``DeliveryLayout.max_blocks``).
+    max_blocks: static grid extent — the widest tile's block count (one
+      entry of ``DeliveryLayout.class_max_blocks``; ``deliver_fused_classes``
+      passes each class's own).
 
     Returns ``[n_dst, D]`` combined messages.
     """
@@ -182,3 +192,52 @@ def deliver_fused_pallas(
         interpret=interpret,
     )(tile_bounds, sorted_src, sorted_dst, live, msgs_aug)
     return out[:n_dst]
+
+
+def deliver_fused_classes(
+    msgs_aug: jnp.ndarray,
+    act_aug: jnp.ndarray | None,
+    layout,
+    monoid_name: str,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One leaf's fused delivery over a degree-classed layout: one
+    per-class Pallas grid each, assembled with the ``inv_perm`` gather.
+
+    msgs_aug: ``[n_src + 1, D]`` — messages with the monoid identity row
+      appended (index ``n_src``; padding lanes point there).
+    act_aug: optional ``[n_src + 1]`` int32 dynamic activity (identity
+      row live), or None.
+
+    Returns ``[n_dst, D]`` combined messages.
+    """
+    outs = []
+    for c in range(layout.n_classes):
+        src_c = layout.class_src[c]
+        live = (
+            jnp.take(act_aug, src_c, axis=0)
+            if act_aug is not None
+            else jnp.ones_like(src_c)
+        )
+        outs.append(
+            deliver_fused_pallas(
+                msgs_aug,
+                src_c,
+                layout.class_dst[c],
+                live,
+                layout.class_bounds[c],
+                layout.class_rows[c],
+                monoid_name,
+                layout.class_max_blocks[c],
+                block_n=layout.block_n,
+                block_e=layout.class_block_e[c],
+                interpret=interpret,
+            )
+        )
+    # Class partials stack class-major (matching slot assignment); the
+    # appended identity row serves every zero-degree destination.
+    return jnp.take(
+        jnp.concatenate(outs + [msgs_aug[-1:]], axis=0),
+        layout.inv_perm, axis=0,
+    )

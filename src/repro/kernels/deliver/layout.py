@@ -1,31 +1,42 @@
-"""Dst-sorted CSR delivery layouts: the precompute behind fused delivery.
+"""Dst-sorted degree-class (sliced-ELL) delivery layouts: the precompute
+behind fused delivery.
 
 The deliver/combine half-superstep is MESH's hot path.  Its reference
 lowering (``repro.core.engine.deliver``) is gather -> mask -> segment
 reduce, which materializes a ``[nnz, D]`` rows array in HBM and re-reads
 it — roughly 3x the traffic the combine fundamentally needs.  The fused
 path removes that intermediate by reorganizing the incidence ONCE, on the
-host, into a destination-sorted CSR layout:
+host, into a destination-sorted layout.
 
-* ``order`` — the *stable* dst-sort permutation (stability keeps each
-  segment's rows in original incidence order, so reduction order — and
-  therefore bitwise results for order-sensitive float sums — matches the
-  reference scatter path);
-* ``row_offsets`` — CSR offsets per destination, from which the Pallas
-  kernel derives per-output-tile *edge-block bounds* (block-sparse skip:
-  each grid step reads only its incident edge blocks, never a full
-  j-sweep);
-* an ELL + sorted-remainder packing for the XLA lowering on hosts
-  without a native Pallas backend: the first ``k`` incidences of every
-  destination live in a dense ``[n_dst, k]`` id table (reduced with one
-  vectorized dense reduction — no serialized scatter), overflow
-  incidences of heavy destinations stay in dst-sorted COO and take a
-  sorted segment reduce.
+Real hypergraphs are heavy-tailed (power-law degrees and cardinalities),
+so a single ELL width cannot serve both a mega-hub and the long tail:
+capped at ``k``, a hub spills almost all of its incidences into an
+overflow scatter; sized for the hub, the tail drowns in padding.  The
+layout here is therefore **degree-classed** (SELL-style): destinations
+are partitioned into a few contiguous *degree classes*, each with its own
+power-of-two ELL width:
+
+* ``plan_degree_classes`` picks 1–``MAX_CLASSES`` class boundaries from
+  the live-degree histogram by dynamic programming over candidate
+  power-of-two widths, minimizing dense padding plus (weighted) residual
+  spill.  The plan is a pure function of the histogram, so the Engine's
+  cost model and this builder can never disagree.
+* Destinations are permuted class-major (ascending id within a class);
+  ``inv_perm`` maps destination id -> its slot in the concatenated
+  per-class outputs, so results assemble with one gather — never a
+  scatter.  Zero-degree destinations (bucket padding!) own no slot at
+  all: they point at an appended identity row.
+* Per class, two synchronized packings of the same dst-sorted edges:
+  a dense ``[rows_c, k_c]`` ELL id table (the XLA lowering's vectorized
+  axis reduce) and a CSR-with-tile-bounds edge list (the Pallas kernel's
+  block-sparse skip, with class-local ``block_e``/grid extents).
+* Incidences past a hub's class width land in a small dst-sorted COO
+  residual (XLA lowering only — the Pallas CSR form has no width cap)
+  and take one sorted segment reduce.
 
 Statically-dead incidences (``e_mask == 0`` — partition padding, bucket
-padding) are folded into the layout itself: their table entries point at
-the appended *identity row* ``n_src``, so the runtime path never touches
-a mask for them.  Only dynamic ``active`` vectors cost work at runtime.
+padding) are dropped from every packing at build time; only dynamic
+``active`` vectors cost work at runtime.
 
 Everything here is host-side numpy on concrete arrays; the products are
 device arrays registered as one pytree (``DeliveryLayout``) so layouts
@@ -40,15 +51,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# ELL planning: grow k (powers of two) until the COO remainder holds at
-# most this fraction of the incidences, then stop at the cap — heavy
-# destinations past the cap are better served by the remainder's sorted
-# segment reduce than by padding every destination to their degree.
+# Single-ELL planning (the legacy PR-4 packing, kept as the cost model's
+# skew baseline): grow k (powers of two) until the COO remainder holds at
+# most this fraction of the incidences, then stop at the cap.
 ELL_REMAINDER_FRACTION = 0.25
 ELL_K_CAP = 64
-# Remainder / padded-edge buckets: pow2 with a small floor, mirroring
+# Degree-class planning: at most this many classes, widths capped here
+# (a power-of-two width at most doubles a row's slots, and the DP only
+# widens a class when few rows pay for it, so the cap merely bounds the
+# absolute width of a single mega-hub row before it spills).
+MAX_CLASSES = 4
+CLASS_K_CAP = 65536
+# One residual incidence costs a lane of the sorted segment reduce —
+# serialized scatter work — vs a dense vectorized ELL slot.  Measured
+# on the bench_delivery regimes (CPU XLA): the dense axis reduce moves
+# ~125M slots/s vs ~11M lanes/s through the sorted scatter, so the DP
+# prices a residual lane at ~12 dense slots and keeps hubs dense.
+RESIDUAL_WEIGHT = 12.0
+# Remainder / padded-row buckets: pow2 with a small floor, mirroring
 # ``repro.core.serving.bucket_dim`` so serving signatures stay bounded.
 _PAD_FLOOR = 8
+_ROW_FLOOR = 8
 
 
 def _pow2_at_least(n: int, floor: int = 1) -> int:
@@ -58,75 +81,276 @@ def _pow2_at_least(n: int, floor: int = 1) -> int:
     return b
 
 
+def _width_stats(degrees: np.ndarray, k_cap: int):
+    """Per-candidate-width overflow stats from ONE cumulative histogram.
+
+    Candidate widths are ``1, 2, 4, ..., min(pow2 >= max_degree, k_cap)``.
+    Returns ``(widths, cnt_le, overflow, n_pos)`` where ``cnt_le[j]`` is
+    the number of destinations with ``1 <= degree <= widths[j]`` and
+    ``overflow[j] = sum(max(degree - widths[j], 0))`` — O(max_degree)
+    total instead of rescanning the full degree array per width.
+    """
+    degrees = np.asarray(degrees, np.int64)
+    pos = degrees[degrees > 0]
+    n_pos = int(pos.size)
+    if n_pos == 0:
+        return (np.array([1], np.int64), np.zeros(1, np.int64),
+                np.zeros(1, np.int64), 0)
+    max_deg = int(pos.max())
+    total = int(pos.sum())
+    top = min(_pow2_at_least(max_deg), int(k_cap))
+    widths = np.asarray(
+        [1 << e for e in range(top.bit_length())], np.int64
+    )
+    hist = np.bincount(pos)
+    cnt_cum = np.cumsum(hist)
+    deg_cum = np.cumsum(hist * np.arange(hist.size, dtype=np.int64))
+    idx = np.minimum(widths, max_deg)
+    cnt_le = cnt_cum[idx]
+    sum_le = deg_cum[idx]
+    overflow = (total - sum_le) - widths * (n_pos - cnt_le)
+    return widths, cnt_le, overflow, n_pos
+
+
 def plan_ell_width(degrees: np.ndarray, nnz: int) -> tuple[int, int]:
-    """Pick the ELL width ``k`` for a degree distribution.
+    """Pick a SINGLE ELL width ``k`` for a degree distribution.
 
     Returns ``(k, remainder)``: the smallest power-of-two ``k`` (capped
     at ``ELL_K_CAP``) whose overflow — incidences past each
     destination's first ``k`` — is at most ``ELL_REMAINDER_FRACTION`` of
-    ``nnz``, plus the overflow count at that ``k``.  Deterministic in
-    the degree histogram, so the Engine's cost model and the layout
-    builder can never disagree.
+    ``nnz``, plus the overflow count at that ``k``.  This is the PR-4
+    single-class packing, kept as the skew baseline the degree-class
+    cost model compares against.  Vectorized over one cumulative degree
+    histogram (``_width_stats``); deterministic in the histogram, so the
+    Engine's cost model and the layout builder can never disagree.
     """
-    if nnz <= 0 or degrees.size == 0:
+    if nnz <= 0 or np.asarray(degrees).size == 0:
         return 1, 0
-    k = 1
-    while True:
-        remainder = int(np.maximum(degrees - k, 0).sum())
-        if remainder <= ELL_REMAINDER_FRACTION * nnz or k >= ELL_K_CAP:
-            return k, remainder
-        k *= 2
+    widths, _, overflow, n_pos = _width_stats(degrees, ELL_K_CAP)
+    if n_pos == 0:
+        return 1, 0
+    ok = overflow <= ELL_REMAINDER_FRACTION * nnz
+    ok[-1] = True  # the cap (or a width >= max degree) always stops
+    j = int(np.argmax(ok))
+    return int(widths[j]), int(overflow[j])
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassPlan:
+    """A degree-class partition: the data-dependent half of a layout.
+
+    ``widths`` are ascending power-of-two ELL widths, one per class; a
+    destination with live degree ``g > 0`` belongs to the first class
+    with ``g <= k_c`` (hubs past the last width stay in the last class,
+    spilling ``g - k_C`` incidences to the residual).  ``rows`` counts
+    the destinations per class under the histogram the plan was built
+    from; ``residual`` their total spill.  Pure data — hashable,
+    comparable, derived deterministically from the degree histogram.
+    """
+
+    widths: tuple[int, ...]
+    rows: tuple[int, ...]
+    residual: int
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.widths)
+
+    @property
+    def padded_rows(self) -> int:
+        """Dense ELL slots the plan commits to (pre row-padding)."""
+        return int(sum(r * k for r, k in zip(self.rows, self.widths)))
+
+    @property
+    def work(self) -> int:
+        """Total lanes the XLA lowering touches: dense slots + residual."""
+        return self.padded_rows + int(self.residual)
+
+    @property
+    def built_rows(self) -> tuple:
+        """Per-class row counts as ``build_delivery_layout`` will pad
+        them (pow2, floor ``_ROW_FLOOR``) — what the tables really
+        allocate."""
+        return tuple(
+            _pow2_at_least(max(int(r), 1), _ROW_FLOOR) for r in self.rows
+        )
+
+    @property
+    def built_work(self) -> int:
+        """Dense slots + residual at the BUILDER's row padding — the
+        work a layout built from this plan actually executes (the cost
+        model budgets on this, not the tighter DP-count ``work``)."""
+        dense = sum(r * k for r, k in zip(self.built_rows, self.widths))
+        return int(dense) + int(self.residual)
+
+    @property
+    def weighted_work(self) -> float:
+        """The DP's objective: dense slots plus residual at
+        ``RESIDUAL_WEIGHT`` (a residual lane pays the serialized sorted
+        segment reduce; a dense slot is vectorized).  The cost model's
+        skew detector compares plans on this scale."""
+        return self.padded_rows + RESIDUAL_WEIGHT * self.residual
+
+
+def plan_degree_classes(
+    degrees: np.ndarray,
+    nnz: int,
+    *,
+    max_classes: int = MAX_CLASSES,
+    k_cap: int = CLASS_K_CAP,
+) -> ClassPlan:
+    """Partition a live-degree histogram into 1–``max_classes`` degree
+    classes with power-of-two ELL widths.
+
+    Dynamic programming over the candidate widths of ``_width_stats``:
+    a class covering degrees ``(k_prev, k]`` costs ``count * k`` dense
+    slots; hubs past the last width cost its width dense plus
+    ``RESIDUAL_WEIGHT`` per spilled incidence (residual lanes take the
+    serialized sorted segment reduce).  With <= 13 candidate widths and
+    <= 4 classes the sweep is trivially cheap, and — like
+    ``plan_ell_width`` — a pure function of the histogram.
+    """
+    degrees = np.asarray(degrees)
+    if nnz <= 0 or degrees.size == 0 or not (degrees > 0).any():
+        return ClassPlan(widths=(1,), rows=(0,), residual=0)
+    widths, cnt_le, overflow, n_pos = _width_stats(degrees, k_cap)
+    nw = len(widths)
+    max_classes = max(int(max_classes), 1)
+
+    INF = float("inf")
+    # best[c][j]: min dense slots covering all degrees <= widths[j] with
+    # c classes, the last of width widths[j].
+    best = np.full((max_classes + 1, nw), INF)
+    prev = np.full((max_classes + 1, nw), -1, np.int64)
+    best[1, :] = cnt_le * widths
+    for c in range(2, max_classes + 1):
+        for j in range(c - 1, nw):
+            cand = best[c - 1, :j] + (cnt_le[j] - cnt_le[:j]) * widths[j]
+            jp = int(np.argmin(cand))
+            if cand[jp] < best[c, j]:
+                best[c, j] = cand[jp]
+                prev[c, j] = jp
+    # Close each (c, j) plan: hubs past widths[j] pay widths[j] dense
+    # slots each plus weighted residual spill.
+    hub_rows = n_pos - cnt_le
+    close = hub_rows * widths + RESIDUAL_WEIGHT * overflow
+    best_cost, best_c, best_j = INF, 1, nw - 1
+    for c in range(1, max_classes + 1):
+        for j in range(nw):
+            cost = best[c, j] + close[j]
+            if cost < best_cost:  # ties: fewer classes, smaller widths
+                best_cost, best_c, best_j = cost, c, j
+    chain = [best_j]
+    for c in range(best_c, 1, -1):
+        chain.append(int(prev[c, chain[-1]]))
+    chain.reverse()
+    plan_widths = [int(widths[j]) for j in chain]
+
+    # Row counts per class; drop classes that own no destinations (the
+    # DP can only produce them as no-cost ties).
+    bounds = [0] + [cnt_le[j] for j in chain]
+    rows = [int(bounds[i + 1] - bounds[i]) for i in range(len(chain))]
+    rows[-1] += int(hub_rows[chain[-1]])
+    keep = [i for i, r in enumerate(rows) if r > 0]
+    if not keep:
+        keep = [len(rows) - 1]
+    return ClassPlan(
+        widths=tuple(plan_widths[i] for i in keep),
+        rows=tuple(rows[i] for i in keep),
+        residual=int(overflow[chain[-1]]),
+    )
+
+
+def classify_degrees(degrees: np.ndarray, widths) -> np.ndarray:
+    """Class index per destination under a plan's widths (-1 for
+    zero-degree destinations, which own no slot).  Shared by the layout
+    builder and the shard harmonizer so assignments always agree."""
+    degrees = np.asarray(degrees, np.int64)
+    w = np.asarray(widths, np.int64)
+    cls = np.minimum(
+        np.searchsorted(w, degrees, side="left"), len(w) - 1
+    )
+    return np.where(degrees > 0, cls, -1).astype(np.int64)
+
+
+def class_block_e(k: int, block_e: int) -> int:
+    """Class-local Pallas edge-block width: at least the caller's
+    ``block_e``, grown toward the class's ELL width so hub classes
+    amortize grid steps, capped at 1024.
+
+    NOTE the cap is width-blind: for min/max/prod the kernel's
+    ``[block_n, block_e, D]`` select-reduce tile scales with the
+    message width ``D``, so on a REAL TPU a grown hub-class block with
+    wide rows can exceed VMEM (interpret-mode CI cannot catch this) —
+    part of the open TPU-validation item in ROADMAP.md; a D-aware cap
+    needs measured VMEM budgets."""
+    return min(max(int(block_e), _pow2_at_least(int(k))), 1024)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DeliveryLayout:
-    """One direction's precomputed fused-delivery layout.
+    """One direction's precomputed fused-delivery layout (degree-classed).
 
     Array children (device arrays; leading dims may gain a partition dim
-    under the distributed executor):
+    under the distributed executor).  Per degree class ``c`` (tuples of
+    length ``n_classes``):
 
-      sorted_src: ``[nnz_pad]`` int32 — sender ids in dst-sorted order;
-        statically-dead and padding lanes point at the identity row
-        ``n_src``.
-      sorted_dst: ``[nnz_pad]`` int32 — destination ids, non-decreasing;
-        padding lanes carry ``n_dst`` (no real destination).
-      ell_idx: ``[n_dst, k]`` int32 — first-``k`` sender ids per
-        destination; empty slots point at the identity row.
-      rem_src / rem_dst: ``[rem_pad]`` int32 — overflow incidences in
-        dst-sorted COO (padding lanes: identity row -> last destination,
-        keeping ``rem_dst`` sorted; they contribute the monoid identity).
-      tile_bounds: ``[n_tiles, 2]`` int32 — per output tile of
-        ``block_n`` destinations: (first edge-block index, n edge
-        blocks) at ``block_e`` granularity.  The Pallas kernel's
-        block-sparse skip; recomputed by ``with_tile_geometry`` when a
-        caller needs a different tiling.
+      class_ell[c]: ``[rows_c, k_c]`` int32 — the class's destinations'
+        first-``k_c`` sender ids, one row per destination slot (identity
+        row ``n_src`` in empty slots).  The XLA lowering's dense table.
+      class_src[c] / class_dst[c]: ``[nnz_c_pad]`` int32 — ALL the
+        class's live incidences in dst-sorted order: sender id and
+        class-LOCAL destination row (padding lanes: identity sender,
+        out-of-range row).  The Pallas kernel's CSR form — no width cap,
+        so the Pallas path needs no residual.
+      class_bounds[c]: ``[n_tiles_c, 2]`` int32 — per output tile of
+        ``block_n`` rows: (first edge block, n edge blocks) at
+        ``class_block_e[c]`` granularity (the block-sparse skip).
+
+    Shared children:
+
+      inv_perm: ``[n_dst]`` int32 — destination id -> slot in the
+        concatenated per-class outputs; zero-degree destinations point
+        at the appended identity slot ``sum(class_rows)``.  Assembly is
+        one gather — no scatter.
+      rem_src / rem_dst: ``[rem_pad]`` int32 — hub incidences past the
+        last class width, in dst-sorted COO (padding lanes: identity
+        sender -> last destination).  XLA lowering only; statically
+        skipped when ``rem_nnz == 0``.
 
     Static aux: ``n_src``, ``n_dst``, ``nnz`` (real incidences),
-    ``block_n``, ``block_e``, ``max_blocks`` (grid extent of the skip).
+    ``rem_nnz`` (real residual), ``class_widths``, ``class_rows``
+    (padded row counts — the array dims), ``block_n``,
+    ``class_block_e``, ``class_max_blocks`` (per-class grid extents).
     """
 
-    sorted_src: jnp.ndarray
-    sorted_dst: jnp.ndarray
-    ell_idx: jnp.ndarray
+    class_ell: tuple
+    class_src: tuple
+    class_dst: tuple
+    class_bounds: tuple
+    inv_perm: jnp.ndarray
     rem_src: jnp.ndarray
     rem_dst: jnp.ndarray
-    tile_bounds: jnp.ndarray
     n_src: int
     n_dst: int
     nnz: int
+    rem_nnz: int
+    class_widths: tuple
+    class_rows: tuple
     block_n: int
-    block_e: int
-    max_blocks: int
+    class_block_e: tuple
+    class_max_blocks: tuple
 
     def tree_flatten(self):
         children = (
-            self.sorted_src, self.sorted_dst, self.ell_idx,
-            self.rem_src, self.rem_dst, self.tile_bounds,
+            self.class_ell, self.class_src, self.class_dst,
+            self.class_bounds, self.inv_perm, self.rem_src, self.rem_dst,
         )
         aux = (
-            self.n_src, self.n_dst, self.nnz, self.block_n, self.block_e,
-            self.max_blocks,
+            self.n_src, self.n_dst, self.nnz, self.rem_nnz,
+            self.class_widths, self.class_rows, self.block_n,
+            self.class_block_e, self.class_max_blocks,
         )
         return children, aux
 
@@ -135,18 +359,43 @@ class DeliveryLayout:
         return cls(*children, *aux)
 
     @property
+    def n_classes(self) -> int:
+        return len(self.class_widths)
+
+    @property
+    def n_slots(self) -> int:
+        """Concatenated per-class output rows (the identity slot sits
+        one past the end)."""
+        return int(sum(self.class_rows))
+
+    @property
     def k(self) -> int:
-        return int(self.ell_idx.shape[-1])
+        """Widest class width (hub class)."""
+        return int(max(self.class_widths))
+
+    @property
+    def ell_slots(self) -> int:
+        """Total dense ELL slots across classes (padding-work metric)."""
+        return int(
+            sum(r * k for r, k in zip(self.class_rows, self.class_widths))
+        )
 
     @property
     def rem_len(self) -> int:
         return int(self.rem_src.shape[-1])
 
     def shape_signature(self) -> tuple:
-        """Hashable shape tuple for the serving executable cache key."""
+        """Hashable shape tuple for the serving executable cache key —
+        covers every class-plan-dependent dim, so a degree-regime shift
+        within a shape bucket legitimately recompiles."""
         return (
-            tuple(self.sorted_src.shape), tuple(self.ell_idx.shape),
-            tuple(self.rem_src.shape), tuple(self.tile_bounds.shape),
+            tuple(tuple(a.shape) for a in self.class_ell),
+            tuple(tuple(a.shape) for a in self.class_src),
+            tuple(tuple(a.shape) for a in self.class_bounds),
+            tuple(self.inv_perm.shape),
+            tuple(self.rem_src.shape),
+            self.class_widths, self.class_rows, self.class_block_e,
+            self.class_max_blocks, self.rem_nnz,
             self.n_src, self.n_dst, self.nnz,
         )
 
@@ -182,21 +431,24 @@ def build_delivery_layout(
     n_src: int,
     n_dst: int,
     *,
-    k: int | None = None,
+    plan: ClassPlan | None = None,
     block_n: int = 128,
     block_e: int = 256,
-    pad_sorted_to: int | None = None,
+    class_rows_pad: tuple | None = None,
+    class_nnz_pad: tuple | None = None,
     rem_pad_to: int | None = None,
 ) -> DeliveryLayout:
-    """Build one direction's layout from a concrete incidence list.
+    """Build one direction's degree-class layout from a concrete
+    incidence list.
 
     ``src``/``dst``/``e_mask`` are host-transferable arrays (``e_mask``
-    may be None).  ``k=None`` lets ``plan_ell_width`` pick the ELL width
-    from the live-degree histogram.  ``pad_sorted_to`` pads the sorted
-    edge arrays (identity lanes) so same-bucket hypergraphs share one
-    executable signature; it must be >= nnz.  ``rem_pad_to`` forces the
-    remainder pad length (>= the overflow count) so per-shard layouts
-    stack into one shard_map operand.
+    may be None).  ``plan=None`` lets ``plan_degree_classes`` pick the
+    class boundaries and widths from the live-degree histogram; the
+    distributed builder passes a shared plan so shard layouts agree.
+    ``class_rows_pad`` / ``class_nnz_pad`` / ``rem_pad_to`` force the
+    per-class row counts, edge-array lengths and residual pad (each >=
+    what this shard needs) so per-shard layouts stack into one
+    shard_map operand.
     """
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
@@ -207,87 +459,141 @@ def build_delivery_layout(
         else np.ones(nnz, bool)
     )
 
+    live_deg = (
+        np.bincount(dst[live], minlength=max(n_dst, 1))[:n_dst]
+        if nnz
+        else np.zeros(max(n_dst, 1), np.int64)[:n_dst]
+    )
+    n_live = int(live.sum())
+    if plan is None:
+        plan = plan_degree_classes(live_deg, n_live)
+    widths = np.asarray(plan.widths, np.int64)
+    n_classes = len(widths)
+
+    cls = classify_degrees(live_deg, widths)
+    rows_real = np.bincount(
+        cls[cls >= 0], minlength=n_classes
+    )[:n_classes]
+    if class_rows_pad is None:
+        rows_pad = tuple(
+            _pow2_at_least(max(int(r), 1), _ROW_FLOOR) for r in rows_real
+        )
+    else:
+        rows_pad = tuple(int(r) for r in class_rows_pad)
+        assert all(p >= r for p, r in zip(rows_pad, rows_real)), (
+            rows_pad, rows_real,
+        )
+
+    # Slot assignment: class-major, ascending destination id within a
+    # class; zero-degree destinations share the appended identity slot.
+    base = np.concatenate([[0], np.cumsum(rows_pad)]).astype(np.int64)
+    n_slots = int(base[-1])
+    inv_perm = np.full(n_dst, n_slots, np.int64)
+    class_members = []
+    for c in range(n_classes):
+        members = np.flatnonzero(cls == c)
+        class_members.append(members)
+        inv_perm[members] = base[c] + np.arange(len(members))
+
+    # One dst-sorted scan feeds every packing.  Stability keeps each
+    # segment's rows in original incidence order, so reduction order —
+    # and therefore bitwise results for order-sensitive exact sums —
+    # matches the reference scatter path.
     order = np.argsort(dst, kind="stable")
-    s_src = src[order]
+    s_src = src[order].astype(np.int32)
     s_dst = dst[order]
     s_live = live[order]
-    # Fold the static mask into the ids: dead incidences gather the
-    # appended identity row and deliver the monoid identity for free.
-    red_src = np.where(s_live, s_src, n_src).astype(np.int32)
-
-    live_deg = np.bincount(
-        s_dst[s_live], minlength=max(n_dst, 1)
-    )[:n_dst] if nnz else np.zeros(max(n_dst, 1), np.int64)[:n_dst]
-    n_live = int(s_live.sum())
-    if k is None:
-        k, _ = plan_ell_width(live_deg, n_live)
-    k = max(int(k), 1)
-
-    # ELL pack (first k live incidences per destination) + overflow COO.
-    # Vectorized: each live incidence's rank within its (sorted, stable)
-    # segment decides its slot — rank < k lands in the dense table,
-    # rank >= k overflows to the dst-sorted remainder.
-    ell = np.full((n_dst, k), n_src, np.int32)
-    counts = np.bincount(s_dst, minlength=max(n_dst, 1))[
-        : max(n_dst, 1)
-    ]
-    seg_starts = np.zeros(max(n_dst, 1) + 1, np.int64)
-    np.cumsum(counts, out=seg_starts[1:])
     if nnz:
+        counts = np.bincount(s_dst, minlength=max(n_dst, 1))
+        seg_starts = np.zeros(counts.size + 1, np.int64)
+        np.cumsum(counts, out=seg_starts[1:])
         live_cum = np.cumsum(s_live)
-        live_before = np.concatenate([[0], live_cum])[
-            seg_starts[s_dst]
-        ]
+        live_before = np.concatenate([[0], live_cum])[seg_starts[s_dst]]
         live_rank = live_cum - 1 - live_before  # valid on live lanes
-        in_ell = s_live & (live_rank < k)
-        ell[s_dst[in_ell], live_rank[in_ell]] = red_src[in_ell]
-        overflow = s_live & (live_rank >= k)
-        rem_s = red_src[overflow]
-        rem_d = s_dst[overflow]  # still sorted: overflow preserves order
+        lane_cls = cls[s_dst]
+        lane_k = widths[np.maximum(lane_cls, 0)]
+        in_ell = s_live & (live_rank < lane_k)
+        over = s_live & (live_rank >= lane_k)
     else:
-        rem_s = np.zeros(0, np.int32)
-        rem_d = np.zeros(0, np.int64)
+        lane_cls = np.zeros(0, np.int64)
+        live_rank = np.zeros(0, np.int64)
+        in_ell = over = np.zeros(0, bool)
+
+    # Per-class ELL tables (XLA lowering).
+    class_ell = []
+    for c in range(n_classes):
+        tbl = np.full((rows_pad[c], int(widths[c])), n_src, np.int32)
+        sel = in_ell & (lane_cls == c)
+        if sel.any():
+            r_local = inv_perm[s_dst[sel]] - base[c]
+            tbl[r_local, live_rank[sel]] = s_src[sel]
+        class_ell.append(tbl)
+
+    # Residual COO (dst-sorted: the scan order preserves it).  Padding
+    # lanes keep rem_dst sorted by pointing at the last destination with
+    # an identity sender (contributes nothing).
+    rem_s = s_src[over]
+    rem_d = s_dst[over]
+    rem_nnz = len(rem_s)
     if rem_pad_to is not None:
-        assert rem_pad_to >= len(rem_s), (rem_pad_to, len(rem_s))
+        assert rem_pad_to >= rem_nnz, (rem_pad_to, rem_nnz)
         rem_pad = int(rem_pad_to)
     else:
-        rem_pad = _pow2_at_least(max(len(rem_s), 1), _PAD_FLOOR)
+        rem_pad = _pow2_at_least(max(rem_nnz, 1), _PAD_FLOOR)
     rem_src = np.full(rem_pad, n_src, np.int32)
-    # Padding remainder lanes keep rem_dst sorted by pointing at the
-    # last destination with an identity sender (contributes nothing).
     rem_dst = np.full(rem_pad, max(n_dst - 1, 0), np.int32)
-    rem_src[: len(rem_s)] = rem_s
-    rem_dst[: len(rem_d)] = rem_d
+    rem_src[:rem_nnz] = rem_s
+    rem_dst[:rem_nnz] = rem_d
 
-    # Sorted edge arrays for the Pallas kernel, padded to the block /
-    # bucket size; padding lanes: identity sender, out-of-range dst.
-    nnz_pad = pad_sorted_to if pad_sorted_to is not None else nnz
-    assert nnz_pad >= nnz, (nnz_pad, nnz)
-    nnz_pad = -(-max(nnz_pad, 1) // block_e) * block_e
-    n_dst_pad = -(-max(n_dst, 1) // block_n) * block_n
-    sorted_src = np.full(nnz_pad, n_src, np.int32)
-    sorted_dst = np.full(nnz_pad, n_dst_pad, np.int32)
-    sorted_src[:nnz] = red_src
-    sorted_dst[:nnz] = s_dst
-
-    row_offsets = seg_starts[: n_dst + 1]
-    bounds, max_blocks = tile_block_bounds(
-        row_offsets, n_dst_pad, block_n, block_e
+    # Per-class dst-sorted CSR edge arrays (Pallas lowering): every live
+    # incidence of the class — hub tails included, the CSR form has no
+    # width cap.  Padding lanes: identity sender, out-of-range row.
+    class_src_a, class_dst_a, class_bounds, c_block_e, c_max_blocks = (
+        [], [], [], [], [],
     )
+    for c in range(n_classes):
+        be = class_block_e(int(widths[c]), block_e)
+        sel = s_live & (lane_cls == c) if nnz else np.zeros(0, bool)
+        e_src = s_src[sel]
+        e_dst_local = (inv_perm[s_dst[sel]] - base[c]).astype(np.int32)
+        nnz_c = len(e_src)
+        rows_blk = -(-rows_pad[c] // block_n) * block_n
+        want = nnz_c if class_nnz_pad is None else int(class_nnz_pad[c])
+        assert want >= nnz_c, (want, nnz_c)
+        nnz_c_pad = -(-max(want, 1) // be) * be
+        a_src = np.full(nnz_c_pad, n_src, np.int32)
+        a_dst = np.full(nnz_c_pad, rows_blk, np.int32)
+        a_src[:nnz_c] = e_src
+        a_dst[:nnz_c] = e_dst_local
+        row_counts = np.zeros(rows_pad[c], np.int64)
+        members = class_members[c]
+        row_counts[: len(members)] = live_deg[members]
+        offsets = np.zeros(rows_pad[c] + 1, np.int64)
+        np.cumsum(row_counts, out=offsets[1:])
+        bounds, mb = tile_block_bounds(offsets, rows_blk, block_n, be)
+        class_src_a.append(a_src)
+        class_dst_a.append(a_dst)
+        class_bounds.append(bounds)
+        c_block_e.append(be)
+        c_max_blocks.append(mb)
 
     return DeliveryLayout(
-        sorted_src=jnp.asarray(sorted_src),
-        sorted_dst=jnp.asarray(sorted_dst),
-        ell_idx=jnp.asarray(ell),
+        class_ell=tuple(jnp.asarray(t) for t in class_ell),
+        class_src=tuple(jnp.asarray(a) for a in class_src_a),
+        class_dst=tuple(jnp.asarray(a) for a in class_dst_a),
+        class_bounds=tuple(jnp.asarray(b) for b in class_bounds),
+        inv_perm=jnp.asarray(inv_perm, jnp.int32),
         rem_src=jnp.asarray(rem_src),
         rem_dst=jnp.asarray(rem_dst),
-        tile_bounds=jnp.asarray(bounds),
         n_src=int(n_src),
         n_dst=int(n_dst),
         nnz=int(nnz),
+        rem_nnz=int(rem_nnz),
+        class_widths=tuple(int(w) for w in widths),
+        class_rows=tuple(int(r) for r in rows_pad),
         block_n=int(block_n),
-        block_e=int(block_e),
-        max_blocks=int(max_blocks),
+        class_block_e=tuple(c_block_e),
+        class_max_blocks=tuple(c_max_blocks),
     )
 
 

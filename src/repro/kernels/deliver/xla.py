@@ -1,22 +1,25 @@
-"""The fused delivery data path expressed to XLA (ELL + sorted COO).
+"""The fused delivery data path expressed to XLA (sliced-ELL + sorted COO).
 
-Same algorithm as ``fused.deliver_fused_pallas`` — mask folded into the
-layout, message rows read once, combine without a serialized scatter —
-but lowered through stock XLA ops for hosts without a native Pallas
-backend (CPU CI, GPU until a Triton port lands):
+Same algorithm as the Pallas class kernels in ``fused`` — mask folded
+into the layout, message rows read once, combine without a serialized
+scatter — but lowered through stock XLA ops for hosts without a native
+Pallas backend (CPU CI, GPU until a Triton port lands):
 
-* the first ``k`` incidences of every destination sit in the layout's
-  dense ``[n_dst, k]`` id table: one vectorized gather and one dense
-  axis reduction replace the scatter (XLA's CPU scatter-add serializes;
-  a ``[n_dst, k, D]`` reduce vectorizes);
-* overflow incidences of heavy destinations take a segment reduce over
+* each degree class's incidences sit in its own dense ``[rows_c, k_c]``
+  id table: one vectorized gather and one dense axis reduction per
+  class replace the scatter (XLA's CPU scatter-add serializes; a
+  ``[rows_c, k_c, D]`` reduce vectorizes).  Class widths track the
+  degree histogram, so hubs stay dense and the tail stays narrow;
+* the per-class partials concatenate (plus one identity row for
+  zero-degree destinations) and assemble with ONE gather through the
+  layout's ``inv_perm`` — no scatter anywhere on the dense path;
+* hub incidences past the last class width take a segment reduce over
   *dst-sorted* ids (``indices_are_sorted=True``) and merge in with one
-  ``combine``.
+  ``combine`` — statically skipped when the layout has no residual.
 
-Statically-dead lanes were redirected to the appended identity row at
-layout-build time, so only a dynamic ``active`` vector costs a mask
-here — and it is a ``[n, k]`` byte mask, not an ``[nnz, D]`` float
-``where``.
+Statically-dead lanes were dropped at layout-build time, so only a
+dynamic ``active`` vector costs a mask here — and it is a per-class
+``[rows_c, k_c]`` byte mask, not an ``[nnz, D]`` float ``where``.
 """
 from __future__ import annotations
 
@@ -56,17 +59,27 @@ def deliver_ell_leaf(
             [active.astype(bool), jnp.ones((1,), bool)]
         )
 
-    n_dst, k = layout.ell_idx.shape
     trail = (1,) * (msgs.ndim - 1)
 
-    rows = jnp.take(
-        msgs_aug, layout.ell_idx.reshape(-1), axis=0
-    ).reshape((n_dst, k) + msgs.shape[1:])
-    if act_aug is not None:
-        live = jnp.take(act_aug, layout.ell_idx, axis=0)  # [n_dst, k]
-        rows = jnp.where(live.reshape((n_dst, k) + trail), rows, ident)
-    out = _reduce_axis1(rows, monoid)
+    outs = []
+    for ell in layout.class_ell:
+        rows_c, k = ell.shape
+        rows = jnp.take(
+            msgs_aug, ell.reshape(-1), axis=0
+        ).reshape((rows_c, k) + msgs.shape[1:])
+        if act_aug is not None:
+            live = jnp.take(act_aug, ell, axis=0)  # [rows_c, k]
+            rows = jnp.where(live.reshape((rows_c, k) + trail), rows, ident)
+        outs.append(_reduce_axis1(rows, monoid))
+    # Assembly is a pure gather: slot order is class-major, and the
+    # appended identity row serves every zero-degree destination.
+    out = jnp.take(
+        jnp.concatenate(outs + [ident_row], axis=0),
+        layout.inv_perm, axis=0,
+    )
 
+    if layout.rem_nnz == 0:
+        return out
     rem_rows = jnp.take(msgs_aug, layout.rem_src, axis=0)
     if act_aug is not None:
         rem_live = jnp.take(act_aug, layout.rem_src, axis=0)
@@ -74,7 +87,7 @@ def deliver_ell_leaf(
             rem_live.reshape((-1,) + trail), rem_rows, ident
         )
     overflow = monoid.segment(
-        rem_rows, layout.rem_dst, num_segments=n_dst,
+        rem_rows, layout.rem_dst, num_segments=layout.n_dst,
         indices_are_sorted=True,
     )
     return monoid.combine(out, overflow)

@@ -375,7 +375,8 @@ SHARDED_SERVING = textwrap.dedent("""
         eng = Engine(mesh=mesh, backend=backend)
         spec = shortest_paths_spec(hg, 0, 12)
         compiled = eng.compile(spec)
-        vb, heb = compiled.run_batch(sources).value
+        res = compiled.run_batch(sources)
+        vb, heb = res.value
         # batched == sequential, bitwise, against the LOCAL engine
         local = Engine()
         for i, s in enumerate(sources):
@@ -384,6 +385,14 @@ SHARDED_SERVING = textwrap.dedent("""
                                   equal_nan=True), (backend, i)
             assert np.array_equal(np.asarray(ref[1]), np.asarray(heb[i]),
                                   equal_nan=True), (backend, i)
+        # batch-aware halting on the distributed scan: the executed
+        # count is a real cond on all(halted) inside shard_map, agrees
+        # with the local backend and undercuts max_iters
+        lexec = int(np.asarray(
+            local.compile(spec).run_batch(sources).supersteps_executed))
+        dexec = int(np.asarray(res.supersteps_executed))
+        assert dexec == lexec, (backend, dexec, lexec)
+        assert dexec < 12, (backend, dexec)
         # same-bucket second hypergraph: zero retraces on the
         # distributed executable (plan rebuilt host-side, shapes cached)
         want = (bucket_dim(hg.n_vertices), bucket_dim(hg.n_hyperedges),

@@ -1,26 +1,39 @@
-"""Fused incidence delivery: layout, kernels, engine seam, serving.
+"""Fused incidence delivery: degree-class layout, kernels, engine seam,
+serving.
 
 The tentpole contracts, asserted:
 
-* **Kernel parity** (property-tested): both fused lowerings — the ELL +
-  sorted-COO XLA form and the Pallas kernel in interpret mode — equal
-  the reference gather/mask/segment path across monoids (sum, min, max,
-  or, prod), dtypes, dead-row masks, dynamic activity, empty segments
-  and padded buckets.  Equality is BITWISE: order-insensitive monoids
-  (min/max/or) on arbitrary values, sum/prod on integer-valued payloads
-  where every association order is exact.  (Float sums across different
-  reduce algorithms differ by reassociation; the tight-allclose case is
-  covered separately.)
+* **Kernel parity** (property-tested): both fused lowerings — the
+  sliced-ELL + sorted-COO XLA form and the per-class Pallas kernels in
+  interpret mode — equal the reference gather/mask/segment path across
+  monoids (sum, min, max, or, prod), dtypes, dead-row masks, dynamic
+  activity, empty segments and padded buckets.  Equality is BITWISE:
+  order-insensitive monoids (min/max/or) on arbitrary values, sum/prod
+  on integer-valued payloads where every association order is exact.
+  (Float sums across different reduce algorithms differ by
+  reassociation; the tight-allclose case is covered separately.)
+* **Planner** (property-tested): the vectorized
+  ``plan_ell_width``/class-planner overflow stats agree with a naive
+  per-width rescan loop; class plans are deterministic in the degree
+  histogram and structurally sound (ascending pow2 widths, rows
+  conserved, residual == spill past the last width).
+* **Pathological degree histograms**: single mega-hub, uniform, empty,
+  all-overflow (forced width-1 plan), hub-on-shard-boundary — both
+  lowerings, all monoids, bitwise vs the reference; shard-harmonized
+  class plans in the subprocess distributed suite.
 * **Engine seam**: ``delivery='pallas_fused'`` matches ``'xla'``
   end-to-end through ``Engine.run`` and ``Engine.compile``; ``auto``
   resolves via the cost model and reports its reasoning; non-monoid
   specs fall back (auto) or raise (explicit).
 * **Distributed**: fused == reference on the replicated AND sharded
   backends, padded (serving) and unpadded (one-shot), in a
-  forced-host-device subprocess.
+  forced-host-device subprocess — including a mega-hub destination
+  whose id sits exactly on a shard boundary.
 * **Batch-aware halting**: ``run_batch`` stops at the slowest query's
   convergence — fewer supersteps than ``max_iters``, bitwise-equal
-  results (asserted in ``tests/test_compile.py``).
+  results, on the local backend (``tests/test_compile.py``) AND the
+  distributed backends (the serving subprocess there asserts
+  ``supersteps_executed`` agrees with the local backend).
 """
 import os
 import subprocess
@@ -44,10 +57,19 @@ from repro.core.engine import deliver
 from repro.core.executor import select_delivery
 from repro.data import powerlaw_hypergraph
 from repro.kernels.deliver import (
+    ClassPlan,
     build_delivery_layout,
+    classify_degrees,
     fused_deliver,
     layout_pair,
+    plan_degree_classes,
     plan_ell_width,
+)
+from repro.kernels.deliver.layout import (
+    CLASS_K_CAP,
+    ELL_K_CAP,
+    ELL_REMAINDER_FRACTION,
+    MAX_CLASSES,
 )
 
 settings.register_profile("ci", max_examples=12, deadline=None)
@@ -110,9 +132,10 @@ def test_fused_delivery_bitwise_equals_reference(case):
 
 
 @given(incidence_case())
-def test_fused_delivery_padded_bucket_invariance(case):
-    """Padding the sorted lanes to a larger bucket (the serving path's
-    ``pad_sorted_to``) must not change any result."""
+def test_fused_delivery_padded_layout_invariance(case):
+    """Forcing larger per-class row/edge/remainder pads (the shard
+    harmonization path) must not change any result, on either
+    lowering."""
     src, dst, mask, n_src, n_dst, monoid, msg, active = case
     prog = Program(procedure=lambda *a: None, combiner=monoid)
     act_j = jnp.asarray(active) if active is not None else None
@@ -121,11 +144,25 @@ def test_fused_delivery_padded_bucket_invariance(case):
     )
     padded = build_delivery_layout(
         src, dst, mask, n_src, n_dst, block_n=8, block_e=16,
-        pad_sorted_to=len(src) + 37,
+        plan=ClassPlan(
+            widths=base.class_widths,
+            rows=tuple(int(r) for r in base.class_rows),
+            residual=base.rem_nnz,
+        ),
+        class_rows_pad=tuple(r + 24 for r in base.class_rows),
+        class_nnz_pad=tuple(
+            int(a.shape[0]) + 37 for a in base.class_src
+        ),
+        rem_pad_to=base.rem_len + 19,
     )
     a = fused_deliver(jnp.asarray(msg), act_j, base, prog, lowering="ell")
-    b = fused_deliver(jnp.asarray(msg), act_j, padded, prog, lowering="ell")
-    assert np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+    for lowering in ("ell", "pallas_interpret"):
+        b = fused_deliver(
+            jnp.asarray(msg), act_j, padded, prog, lowering=lowering
+        )
+        assert np.array_equal(
+            np.asarray(a), np.asarray(b), equal_nan=True
+        ), lowering
 
 
 def test_fused_float_sum_within_reassociation_tolerance():
@@ -159,6 +196,235 @@ def test_plan_ell_width_remainder_rule():
     assert k & (k - 1) == 0  # power of two
     k_uniform, rem_uniform = plan_ell_width(np.full(16, 4), 64)
     assert (k_uniform, rem_uniform) == (4, 0)
+
+
+# --------------------------------------------------------------------------
+# planners: vectorized histogram stats vs the naive loop; class plans
+# --------------------------------------------------------------------------
+
+def _loop_plan_ell_width(degrees, nnz):
+    """The pre-vectorization reference: rescan the degree array at every
+    doubling of k."""
+    if nnz <= 0 or degrees.size == 0:
+        return 1, 0
+    k = 1
+    while True:
+        remainder = int(np.maximum(degrees - k, 0).sum())
+        if remainder <= ELL_REMAINDER_FRACTION * nnz or k >= ELL_K_CAP:
+            return k, remainder
+        k *= 2
+
+
+@st.composite
+def degree_case(draw):
+    n = draw(st.integers(0, 200))
+    seed = draw(st.integers(0, 100_000))
+    profile = draw(st.sampled_from(["uniform", "zipfish", "hub", "zero"]))
+    rng = np.random.default_rng(seed)
+    if profile == "uniform":
+        deg = rng.integers(0, 9, n)
+    elif profile == "zipfish":
+        deg = (rng.pareto(1.2, n) * 3).astype(np.int64)
+    elif profile == "hub":
+        deg = rng.integers(0, 4, n)
+        if n:
+            deg[rng.integers(0, n)] = draw(st.integers(100, 200_000))
+    else:
+        deg = np.zeros(n, np.int64)
+    return deg.astype(np.int64)
+
+
+@given(degree_case())
+def test_vectorized_plan_ell_width_agrees_with_loop(deg):
+    nnz = int(deg.sum())
+    assert plan_ell_width(deg, nnz) == _loop_plan_ell_width(deg, nnz)
+
+
+@given(degree_case())
+def test_class_plan_structurally_sound(deg):
+    nnz = int(deg.sum())
+    plan = plan_degree_classes(deg, nnz)
+    widths = plan.widths
+    # 1..MAX_CLASSES ascending power-of-two widths, capped
+    assert 1 <= len(widths) <= MAX_CLASSES
+    assert all(k & (k - 1) == 0 for k in widths)
+    assert list(widths) == sorted(set(widths))
+    assert widths[-1] <= CLASS_K_CAP
+    # rows conserved: every positive-degree destination sits in exactly
+    # one class; residual is exactly the spill past the last width
+    cls = classify_degrees(deg, widths)
+    assert sum(plan.rows) == int((deg > 0).sum())
+    for c, r in enumerate(plan.rows):
+        assert int((cls == c).sum()) == r
+    spill = int(np.maximum(deg - widths[-1], 0).sum())
+    assert plan.residual == spill
+    # the plan's weighted objective never exceeds the single-ELL plan's
+    # (the DP considers the single class as a candidate)
+    k1, rem1 = plan_ell_width(deg, nnz)
+    if nnz and widths[-1] >= k1:
+        from repro.kernels.deliver.layout import RESIDUAL_WEIGHT
+        single = int((deg > 0).sum()) * k1 + RESIDUAL_WEIGHT * rem1
+        assert plan.weighted_work <= single + 1e-9
+    # deterministic in the histogram
+    assert plan == plan_degree_classes(deg.copy(), nnz)
+
+
+# --------------------------------------------------------------------------
+# pathological degree histograms, both lowerings, all monoids
+# --------------------------------------------------------------------------
+
+def _assert_fused_matches_reference(src, dst, mask, n_src, n_dst,
+                                    layout=None, **build_kw):
+    rng = np.random.default_rng(7)
+    if layout is None:
+        layout = build_delivery_layout(
+            src, dst, mask, n_src, n_dst, block_n=8, block_e=16,
+            **build_kw,
+        )
+    for monoid in MONOIDS_UNDER_TEST:
+        if monoid == "or":
+            msg = rng.random((n_src, 2)) > 0.5
+        else:
+            msg = rng.integers(-4, 5, (n_src, 2)).astype(np.float32)
+        prog = Program(procedure=lambda *a: None, combiner=monoid)
+        active = rng.random(n_src) > 0.3
+        ref = deliver(
+            jnp.asarray(msg), jnp.asarray(active), jnp.asarray(src),
+            jnp.asarray(dst), n_dst, prog,
+            e_mask=jnp.asarray(mask) if mask is not None else None,
+        )
+        for lowering in ("ell", "pallas_interpret"):
+            got = fused_deliver(
+                jnp.asarray(msg), jnp.asarray(active), layout, prog,
+                lowering=lowering,
+            )
+            assert np.array_equal(
+                np.asarray(ref), np.asarray(got), equal_nan=True
+            ), (monoid, lowering)
+    return layout
+
+
+def test_pathological_single_mega_hub():
+    """One destination absorbs ~95% of the incidences: the hub must land
+    in its own wide class (dense), not the residual scatter."""
+    rng = np.random.default_rng(0)
+    n_src, n_dst, nnz = 64, 50, 3000
+    dst = np.where(
+        rng.random(nnz) < 0.95, 7, rng.integers(0, n_dst, nnz)
+    ).astype(np.int32)
+    src = rng.integers(0, n_src, nnz).astype(np.int32)
+    layout = _assert_fused_matches_reference(src, dst, None, n_src, n_dst)
+    hub_deg = int((dst == 7).sum())
+    assert layout.class_widths[-1] >= hub_deg  # hub fully dense
+    assert layout.rem_nnz == 0
+    assert len(layout.class_widths) >= 2  # tail kept narrow
+
+
+def test_pathological_uniform_degrees_collapse_to_one_class():
+    rng = np.random.default_rng(1)
+    n, nnz = 100, 800
+    dst = np.repeat(np.arange(n), 8).astype(np.int32)  # exactly deg 8
+    src = rng.integers(0, n, nnz).astype(np.int32)
+    layout = _assert_fused_matches_reference(src, dst, None, n, n)
+    assert layout.class_widths == (8,)
+    assert layout.rem_nnz == 0
+
+
+def test_pathological_empty_structures():
+    # no incidences at all
+    _assert_fused_matches_reference(
+        np.zeros(0, np.int32), np.zeros(0, np.int32), None, 5, 4
+    )
+    # incidences exist but every one statically dead
+    rng = np.random.default_rng(2)
+    src = rng.integers(0, 6, 20).astype(np.int32)
+    dst = rng.integers(0, 5, 20).astype(np.int32)
+    layout = _assert_fused_matches_reference(
+        src, dst, np.zeros(20, np.float32), 6, 5
+    )
+    assert layout.ell_slots >= 0 and layout.rem_nnz == 0
+    # zero destinations
+    lay = build_delivery_layout(
+        np.zeros(0, np.int32), np.zeros(0, np.int32), None, 3, 0,
+        block_n=8, block_e=16,
+    )
+    prog = Program(procedure=lambda *a: None, combiner="sum")
+    out = fused_deliver(
+        jnp.ones((3, 2), jnp.float32), None, lay, prog, lowering="ell"
+    )
+    assert out.shape == (0, 2)
+
+
+def test_pathological_all_overflow_forced_plan():
+    """A forced width-1 plan pushes nearly every incidence through the
+    residual sorted-COO path — the XLA lowering's worst case — while
+    the Pallas CSR form absorbs it densely.  Both stay bitwise."""
+    rng = np.random.default_rng(3)
+    n_src, n_dst, nnz = 40, 30, 900
+    src = rng.integers(0, n_src, nnz).astype(np.int32)
+    dst = rng.integers(0, n_dst, nnz).astype(np.int32)
+    layout = build_delivery_layout(
+        src, dst, None, n_src, n_dst, block_n=8, block_e=16,
+        plan=ClassPlan(widths=(1,), rows=(n_dst,), residual=nnz - n_dst),
+    )
+    assert layout.rem_nnz > 0.9 * nnz
+    _assert_fused_matches_reference(
+        src, dst, None, n_src, n_dst, layout=layout
+    )
+
+
+def test_pathological_zero_degree_destinations_read_identity():
+    """Bucket padding: destinations with no live incidence own no ELL
+    rows at all and read the identity through ``inv_perm``."""
+    src = np.array([0, 1, 2, 3], np.int32)
+    dst = np.array([2, 2, 2, 2], np.int32)  # only dst 2 is live
+    n_src, n_dst = 4, 9
+    layout = build_delivery_layout(
+        src, dst, None, n_src, n_dst, block_n=8, block_e=16
+    )
+    # every empty destination shares the single identity slot
+    inv = np.asarray(layout.inv_perm)
+    assert (inv[np.arange(n_dst) != 2] == layout.n_slots).all()
+    prog = Program(procedure=lambda *a: None, combiner="min")
+    msg = jnp.arange(4, dtype=jnp.float32)
+    for lowering in ("ell", "pallas_interpret"):
+        out = np.asarray(fused_deliver(msg, None, layout, prog,
+                                       lowering=lowering))
+        assert out[2] == 0.0
+        assert np.isposinf(out[np.arange(n_dst) != 2]).all()
+
+
+def test_shard_harmonized_class_plans_stack():
+    """``build_shard_delivery``: one merged-histogram plan, per-class
+    pads harmonized to maxima — layouts stack, and a hub destination on
+    the shard boundary stays dense on every shard that sees it."""
+    from repro.core.distributed import build_shard_delivery
+
+    rng = np.random.default_rng(4)
+    n_parts, shard_len = 4, 256
+    nv = ne = 64
+    hub = 16  # == ne_pad/n_parts: first id of shard 1's range
+    dst = np.where(
+        rng.random((n_parts, shard_len)) < 0.7, hub,
+        rng.integers(0, ne, (n_parts, shard_len)),
+    ).astype(np.int32)
+    src = rng.integers(0, nv, (n_parts, shard_len)).astype(np.int32)
+    mask = (rng.random((n_parts, shard_len)) > 0.1).astype(np.float32)
+    fwd, bwd = build_shard_delivery(src, dst, mask, nv, ne)
+    for lay in (fwd, bwd):
+        # stacked: every child gained one [n_parts] leading dim, with
+        # identical per-class shapes across shards
+        assert lay.inv_perm.shape[0] == n_parts
+        for c in range(lay.n_classes):
+            assert lay.class_ell[c].shape[0] == n_parts
+            assert lay.class_ell[c].shape[2] == lay.class_widths[c]
+            assert lay.class_src[c].shape[0] == n_parts
+    # the hub's shard-local degree fits its class width on every shard
+    live = np.asarray(mask) != 0
+    for p in range(n_parts):
+        hub_deg = int(((dst[p] == hub) & live[p]).sum())
+        assert fwd.class_widths[-1] >= hub_deg
+    assert fwd.rem_nnz == 0
 
 
 # --------------------------------------------------------------------------
@@ -281,28 +547,56 @@ DISTRIBUTED_FUSED = textwrap.dedent("""
     import jax, numpy as np
     from jax.sharding import Mesh
     from repro.core import Engine
+    from repro.core.hypergraph import HyperGraph
     from repro.data import powerlaw_hypergraph
     from repro.algorithms import shortest_paths_spec, pagerank_spec
 
     mesh = Mesh(np.array(jax.devices()).reshape(4), ('data',))
     hg = powerlaw_hypergraph(90, 70, mean_cardinality=5, seed=0)
+
+    # Mega-hub hyperedge whose id sits exactly on a shard boundary
+    # (ne_pad=72, he_block=18 -> id 18 opens shard 1's range), plus a
+    # mega-hub vertex on a boundary: the shard-harmonized class plans
+    # must keep both dense on every shard that sees a piece of them.
+    rng = np.random.default_rng(1)
+    nv, ne, nnz = 90, 70, 2600
+    dst = np.where(rng.random(nnz) < 0.6, 18,
+                   rng.integers(0, ne, nnz)).astype(np.int32)
+    src = np.where(rng.random(nnz) < 0.4, 23,
+                   rng.integers(0, nv, nnz)).astype(np.int32)
+    hub = HyperGraph.from_coo(src, dst, nv, ne)
+
     local = Engine()
     for backend in ('replicated', 'sharded'):
         eng = Engine(mesh=mesh, backend=backend)
-        # min monoid: one-shot (unpadded) run, bitwise vs local xla
-        ref = local.run(shortest_paths_spec(hg, 1, 12), delivery='xla')
-        got = eng.run(shortest_paths_spec(hg, 1, 12),
-                      delivery='pallas_fused')
-        for a, b in zip(ref.value, got.value):
-            assert np.array_equal(np.asarray(a), np.asarray(b),
-                                  equal_nan=True), backend
-        # sum monoid: reassociation tolerance
-        refp = local.run(pagerank_spec(hg, iters=6), delivery='xla')
-        gotp = eng.run(pagerank_spec(hg, iters=6),
-                       delivery='pallas_fused')
-        for a, b in zip(refp.value, gotp.value):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                       rtol=1e-5, atol=1e-6)
+        for graph, tag in ((hg, 'powerlaw'), (hub, 'boundary-hub')):
+            # min monoid: one-shot (unpadded) run, bitwise vs local xla
+            ref = local.run(shortest_paths_spec(graph, 1, 12),
+                            delivery='xla')
+            got = eng.run(shortest_paths_spec(graph, 1, 12),
+                          delivery='pallas_fused')
+            for a, b in zip(ref.value, got.value):
+                assert np.array_equal(np.asarray(a), np.asarray(b),
+                                      equal_nan=True), (backend, tag)
+            # sum monoid: reassociation tolerance
+            refp = local.run(pagerank_spec(graph, iters=6),
+                             delivery='xla')
+            gotp = eng.run(pagerank_spec(graph, iters=6),
+                           delivery='pallas_fused')
+            for a, b in zip(refp.value, gotp.value):
+                np.testing.assert_allclose(
+                    np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+        # the harmonized shard plans really did keep the boundary hub
+        # dense (no residual scatter lanes anywhere)
+        from repro.core.distributed import build_shard_delivery, _pad_to
+        plan, _ = eng._cached_plan(hub, 4, 'auto')
+        fwd, bwd = build_shard_delivery(
+            plan.shard_src, plan.shard_dst, plan.shard_mask,
+            _pad_to(nv, 4), _pad_to(ne, 4))
+        hub_deg = int((np.asarray(plan.shard_dst) == 18)[
+            np.asarray(plan.shard_mask) != 0].sum())
+        assert fwd.class_widths[-1] >= hub_deg // 4, fwd.class_widths
+        assert fwd.rem_nnz == 0, 'boundary hub spilled to the residual'
         # compiled (bucket-PADDED) fused serving, batched: bitwise vs
         # sequential local, and executed on the distributed executable
         compiled = eng.compile(shortest_paths_spec(hg, 0, 12),
