@@ -1,0 +1,161 @@
+"""The serving tier end-to-end: coalescing front-end + persistent cache.
+
+Extends ``bench_serving`` (raw ``run_batch`` cold/warm) up one layer to
+the full request path — ``Frontend.submit`` -> coalescing batcher ->
+``run_batch`` -> future fan-out — and down one layer to the disk store:
+
+* **cold boot**: fresh process-state analogue (empty disk cache):
+  ``serve.warm`` pays AOT trace + XLA compile for every path, then a
+  mixed SSSP/PPR trace replays through the front-end;
+* **warm serve**: the same trace again on the hot executables — the
+  sustained q/s the tier holds once booted (gate: ≥ 5x the cold
+  replay, which amortizes the compiles);
+* **disk-warmed boot**: a second Engine on the same cache dir —
+  ``serve.warm`` must deserialize every executable (ZERO retraces,
+  asserted) and its first replay must already run at warm q/s (gate:
+  ≥ 5x cold replay — no compile hiding in the first flush).
+
+Reports the latency split (queue-wait vs execute p50/p99), per-bucket
+occupancy and boot times; writes ``BENCH_serve_tier.json`` (uploaded
+by the nightly CI job).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.algorithms import random_walk_spec, shortest_paths_spec
+from repro.core import Engine
+from repro.data import make_dataset
+from repro.serve import DiskExecutableCache, Frontend, warm
+
+from benchmarks.common import SCALE, emit_json, row
+
+REQUESTS = 96
+MAX_BATCH = 16
+MAX_DELAY_MS = 5.0
+ITERS = 8
+SSSP_MIX = 0.6
+
+
+def _specs(hg):
+    return {
+        "sssp": shortest_paths_spec(hg, 0, ITERS),
+        "ppr": random_walk_spec(hg, iters=ITERS),
+    }
+
+
+def _trace(hg, rng):
+    return [
+        ("sssp" if rng.random() < SSSP_MIX else "ppr",
+         int(rng.integers(0, hg.n_vertices)))
+        for _ in range(REQUESTS)
+    ]
+
+
+def _replay(engine, hg, trace) -> tuple[float, dict]:
+    """One front-end lifetime serving ``trace``; (wall_s, stats)."""
+    fe = Frontend(engine, max_batch=MAX_BATCH, max_delay_ms=MAX_DELAY_MS)
+    for key, spec in _specs(hg).items():
+        fe.register(key, spec)
+    t0 = time.perf_counter()
+    with fe:
+        futs = [fe.submit(key, query=q) for key, q in trace]
+        for f in futs:
+            f.result()
+    return time.perf_counter() - t0, fe.stats()
+
+
+def run() -> None:
+    hg = make_dataset("dblp", scale=0.002 * SCALE, seed=0)
+    rng = np.random.default_rng(0)
+    trace = _trace(hg, rng)
+    cache_dir = tempfile.mkdtemp(prefix="repro-serve-tier-")
+
+    # -- cold boot: empty disk cache, compiles all the way down ----------
+    eng_cold = Engine(disk_cache=DiskExecutableCache(cache_dir))
+    t0 = time.perf_counter()
+    boot_cold = warm(eng_cold, list(_specs(hg).values()),
+                     batch_sizes=(MAX_BATCH,), queries=[0, 0])
+    cold_boot_s = time.perf_counter() - t0
+    cold_wall_s, _ = _replay(eng_cold, hg, trace)
+    cold_qps = REQUESTS / (cold_boot_s + cold_wall_s)
+    row("serve_tier/cold_boot", cold_boot_s * 1e6,
+        f"traces={boot_cold['traces']};stored={boot_cold['compiled']}")
+    row(f"serve_tier/cold_replay{REQUESTS}",
+        (cold_boot_s + cold_wall_s) * 1e6, f"qps={cold_qps:.1f}")
+
+    # -- warm serve: same engine, hot executables ------------------------
+    warm_wall_s, warm_stats = _replay(eng_cold, hg, trace)
+    warm_qps = REQUESTS / warm_wall_s
+    row(f"serve_tier/warm_replay{REQUESTS}", warm_wall_s * 1e6,
+        f"qps={warm_qps:.1f};"
+        f"wait_p99={warm_stats['queue_wait']['p99_s'] * 1e3:.2f}ms;"
+        f"exec_p99={warm_stats['execute']['p99_s'] * 1e3:.2f}ms")
+    speedup = warm_qps / cold_qps
+    assert speedup >= 5.0, (
+        f"warm q/s only {speedup:.1f}x cold (< 5x): serve-tier compile "
+        "amortization regressed"
+    )
+
+    # -- disk-warmed boot: new replica, same cache dir -------------------
+    eng_disk = Engine(disk_cache=DiskExecutableCache(cache_dir))
+    t0 = time.perf_counter()
+    boot_disk = warm(eng_disk, list(_specs(hg).values()),
+                     batch_sizes=(MAX_BATCH,), queries=[0, 0])
+    disk_boot_s = time.perf_counter() - t0
+    assert boot_disk["traces"] == 0, (
+        f"disk-warmed boot retraced {boot_disk['traces']}x — "
+        "persistent executable cache regression"
+    )
+    disk_wall_s, disk_stats = _replay(eng_disk, hg, trace)
+    disk_qps = REQUESTS / disk_wall_s
+    retraces = eng_disk.cache_stats()["traces"]
+    assert retraces == 0, (
+        f"disk-warmed serve retraced {retraces}x"
+    )
+    # the first flush already runs warm: the whole first replay of a
+    # disk-booted replica must clear the same >= 5x-cold gate.
+    disk_speedup = disk_qps / cold_qps
+    assert disk_speedup >= 5.0, (
+        f"disk-warmed replay only {disk_speedup:.1f}x cold (< 5x): "
+        "boot-from-disk is not reaching warm q/s in its first flushes"
+    )
+    row("serve_tier/disk_boot", disk_boot_s * 1e6,
+        f"from_disk={boot_disk['from_disk']};retraces=0;"
+        f"boot_speedup={cold_boot_s / disk_boot_s:.1f}x")
+    row(f"serve_tier/disk_replay{REQUESTS}", disk_wall_s * 1e6,
+        f"qps={disk_qps:.1f}")
+
+    occupancy = {
+        bucket: s["mean_occupancy"]
+        for bucket, s in warm_stats["buckets"].items()
+    }
+    emit_json("serve_tier", {
+        "n_vertices": hg.n_vertices,
+        "n_hyperedges": hg.n_hyperedges,
+        "nnz": hg.nnz,
+        "requests": REQUESTS,
+        "max_batch": MAX_BATCH,
+        "max_delay_ms": MAX_DELAY_MS,
+        "sssp_mix": SSSP_MIX,
+        "cold_boot_s": cold_boot_s,
+        "cold_qps": cold_qps,
+        "warm_qps": warm_qps,
+        "warm_over_cold": speedup,
+        "disk_boot_s": disk_boot_s,
+        "disk_boot_traces": boot_disk["traces"],
+        "disk_qps": disk_qps,
+        "disk_over_cold": disk_speedup,
+        "queue_wait": warm_stats["queue_wait"],
+        "execute": warm_stats["execute"],
+        "flush_reasons": warm_stats["flush_reasons"],
+        "occupancy": occupancy,
+        "disk_cache": eng_disk.disk_cache.stats(),
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -17,6 +17,7 @@ def main() -> None:
         bench_representation,
         bench_roofline,
         bench_scaling,
+        bench_serve_tier,
         bench_serving,
         bench_vs_specialized,
     )
@@ -30,6 +31,7 @@ def main() -> None:
         ("roofline (EXPERIMENTS §Roofline)", bench_roofline.run),
         ("motifs (batch analytics)", bench_motifs.run),
         ("serving (compile-once serve-many)", bench_serving.run),
+        ("serve_tier (front-end + persistent cache)", bench_serve_tier.run),
         ("delivery (fused superstep data path)", bench_delivery.run),
     ]
     failures = 0

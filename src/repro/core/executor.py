@@ -583,6 +583,7 @@ class Engine:
         mesh=None,
         config: ExecutionConfig | None = None,
         exec_cache_size: int = 32,
+        disk_cache=None,
         **overrides: Any,
     ):
         cfg = config if config is not None else ExecutionConfig()
@@ -604,9 +605,17 @@ class Engine:
         # counters cache_stats() reports.
         self.exec_cache_size = int(exec_cache_size)
         self._exec_cache: OrderedDict = OrderedDict()
+        self._exec_meta: dict = {}
         self._cache_hits = 0
         self._cache_misses = 0
+        self._cache_evictions = 0
         self._trace_count = 0
+        # Optional persistent cross-process store (duck-typed:
+        # ``repro.serve.cache.DiskExecutableCache``); when set, freshly
+        # built executables are wrapped so their first use resolves
+        # disk-deserialize vs AOT-compile-and-store.  Core never imports
+        # the serve tier — the dependency points the other way.
+        self.disk_cache = disk_cache
 
     # -- resolution ---------------------------------------------------------
 
@@ -967,14 +976,29 @@ class Engine:
         ``traces`` counts actual executable tracings (a retrace with a
         warm cache is a bug the serving tests assert against);
         ``hits``/``misses`` count ``CompiledAlgorithm`` lookups in this
-        Engine's LRU.
+        Engine's LRU; ``evictions`` counts LRU capacity drops (an
+        eviction storm on a serving fleet means the bucket set outgrew
+        ``exec_cache_size``).  ``entry_shapes`` describes each live
+        entry's bucket (algorithm, padded dims, batch bucket, design
+        point) so an operator can see WHAT the cache holds, not just how
+        much; ``disk`` mirrors the attached persistent store's counters
+        (``None`` without one).
         """
         return {
             "entries": len(self._exec_cache),
             "capacity": self.exec_cache_size,
             "hits": self._cache_hits,
             "misses": self._cache_misses,
+            "evictions": self._cache_evictions,
             "traces": self._trace_count,
+            "entry_shapes": [
+                dict(meta) for meta in self._exec_meta.values()
+            ],
+            "disk": (
+                self.disk_cache.stats()
+                if self.disk_cache is not None
+                else None
+            ),
         }
 
     def _note_trace(self) -> None:
@@ -982,8 +1006,11 @@ class Engine:
         executable body, so the counter exposes real retraces."""
         self._trace_count += 1
 
-    def _executable_for(self, key, build: Callable[[], Any]):
-        """LRU lookup of a compiled executable by shape signature."""
+    def _executable_for(self, key, build: Callable[[], Any], meta=None):
+        """LRU lookup of a compiled executable by shape signature.
+
+        ``meta``: a small human-readable bucket summary recorded per
+        entry for ``cache_stats()["entry_shapes"]``."""
         cache = self._exec_cache
         if key in cache:
             cache.move_to_end(key)
@@ -991,9 +1018,15 @@ class Engine:
             return cache[key]
         self._cache_misses += 1
         exe = build()
+        if self.disk_cache is not None:
+            exe = self.disk_cache.wrap(self, key, exe)
         cache[key] = exe
+        if meta is not None:
+            self._exec_meta[key] = meta
         while len(cache) > self.exec_cache_size:
-            cache.popitem(last=False)
+            evicted, _ = cache.popitem(last=False)
+            self._exec_meta.pop(evicted, None)
+            self._cache_evictions += 1
         return exe
 
     # -- batch analytics -----------------------------------------------------

@@ -320,6 +320,20 @@ def _pad_shards(plan, shard_len_pad: int):
     )
 
 
+def _warm_executable(exe, args: tuple) -> str:
+    """Materialize one executable without serving a request.
+
+    Disk-backed executables (``repro.serve.cache``) resolve their
+    deserialize-vs-AOT-compile choice here and report which path won;
+    plain jitted executables warm by executing once (the compile is the
+    point — the discarded result costs one padded batch)."""
+    warm_fn = getattr(exe, "warm", None)
+    if warm_fn is not None:
+        return warm_fn(args)
+    jax.block_until_ready(exe(*args))
+    return "jit"
+
+
 # --------------------------------------------------------------------------
 # the serve-many handle
 # --------------------------------------------------------------------------
@@ -407,6 +421,61 @@ class CompiledAlgorithm:
             queries,
         )
         return self._execute(prep, queries_p, batch=(b, b_pad))
+
+    def warmup(
+        self,
+        *,
+        query: Any = None,
+        batch_sizes: tuple[int, ...] = (),
+        hg: HyperGraph | None = None,
+    ) -> dict:
+        """Materialize executables WITHOUT serving traffic — the
+        replica-boot half of ``repro.serve.cache.warm``.
+
+        Resolves the unbatched path plus one batched path per bucket in
+        ``batch_sizes`` (sizes quantize through the normal batch
+        buckets).  With a disk cache attached to the Engine, each path
+        either deserializes from the store (zero retraces) or
+        AOT-compiles and populates it; without one, this is a plain
+        eager compile.  ``query``: example request for specs whose
+        ``query0`` is unset; required to warm query-bearing paths.
+
+        Returns ``{path: {"source": "disk"|"aot"|"jit"}}``.
+        """
+        spec = self.spec
+        if query is None:
+            query = spec.query0
+        has_query = (
+            spec.bind_query is not None
+            and spec.init is not None
+            and query is not None
+        )
+        prep = self._prepared(hg, rebind=has_query)
+        q = _canon_query(query) if has_query else None
+        report = {"single": self._execute(prep, q, batch=None,
+                                          warm_only=True)}
+        for b in batch_sizes:
+            if spec.bind_query is None:
+                raise ValueError(
+                    f"spec {spec.name!r} has no bind_query: no batched "
+                    "path to warm"
+                )
+            if q is None:
+                raise ValueError(
+                    "warming a batched path needs an example query "
+                    "(spec.query0 is unset — pass query=...)"
+                )
+            b_pad = bucket_dim(int(b), floor=BATCH_FLOOR)
+            queries = jax.tree.map(
+                lambda leaf: jnp.broadcast_to(
+                    leaf, (b_pad,) + jnp.shape(leaf)
+                ),
+                q,
+            )
+            report[f"batch{b_pad}"] = self._execute(
+                prep, queries, batch=(b_pad, b_pad), warm_only=True
+            )
+        return report
 
     # -- internals ---------------------------------------------------------
 
@@ -499,7 +568,7 @@ class CompiledAlgorithm:
         )
         return plan
 
-    def _execute(self, prep: dict, query, batch):
+    def _execute(self, prep: dict, query, batch, warm_only: bool = False):
         from repro.core.executor import Result
 
         cfg = self.config
@@ -527,6 +596,16 @@ class CompiledAlgorithm:
             batch_pad=b_pad,
             delivery_sig=prep["delivery_sig"],
         )
+        meta = {
+            "algorithm": spec.name,
+            "backend": cfg.backend,
+            "delivery": cfg.delivery,
+            "nv_pad": prep["nv_pad"],
+            "ne_pad": prep["ne_pad"],
+            "nnz_pad": prep["nnz_pad"],
+            "batch_pad": b_pad,
+            "n_parts": prep["n_parts"],
+        }
 
         if distributed:
             exe = engine._executable_for(
@@ -536,28 +615,36 @@ class CompiledAlgorithm:
                     prep["nv_pad"], prep["ne_pad"],
                     has_query, b_pad, engine._note_trace,
                 ),
+                meta=meta,
             )
             s_src, s_dst, s_mask = prep["shards"]
+            args = (
+                hgp, s_src, s_dst, s_mask, prep["delivery"],
+                jnp.asarray(nv, jnp.int32),
+                jnp.asarray(ne, jnp.int32),
+                query,
+            )
             with engine.mesh:
-                v_attr, he_attr, stats, executed = exe(
-                    hgp, s_src, s_dst, s_mask, prep["delivery"],
-                    jnp.asarray(nv, jnp.int32),
-                    jnp.asarray(ne, jnp.int32),
-                    query,
-                )
+                if warm_only:
+                    return {"source": _warm_executable(exe, args)}
+                v_attr, he_attr, stats, executed = exe(*args)
         else:
             exe = engine._executable_for(
                 key,
                 lambda: _build_local_executable(
                     spec, cfg, has_query, b_pad, engine._note_trace,
                 ),
+                meta=meta,
             )
-            v_attr, he_attr, stats, executed = exe(
+            args = (
                 hgp, prep["delivery"],
                 jnp.asarray(nv, jnp.int32),
                 jnp.asarray(ne, jnp.int32),
                 query,
             )
+            if warm_only:
+                return {"source": _warm_executable(exe, args)}
+            v_attr, he_attr, stats, executed = exe(*args)
 
         # Slice padding (and batch padding) back off; extract on a
         # real-size hypergraph whose attrs may carry a leading batch dim

@@ -1,8 +1,10 @@
 """Launch layer: meshes, task builders, dry-run, trainers, serving.
 
 Hypergraph analytics launches through ``repro.launch.hypergraph`` (the
-Engine-facade CLI); LM/GNN training and serving through ``train`` /
-``serve`` / ``dryrun``.
+Engine-facade CLI) and serves through ``repro.launch.serve_hypergraph``
+(the coalescing front-end + persistent executable cache); LM/GNN
+training and *LM decode* serving through ``train`` / ``serve`` /
+``dryrun`` — note ``serve`` (LM) vs ``serve_hypergraph`` (hypergraph).
 """
 from repro.launch.mesh import (
     dp_axes,

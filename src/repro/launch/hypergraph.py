@@ -67,6 +67,10 @@ def _parse(argv=None):
     ap.add_argument("--batch", type=int, default=None,
                     help="serve N random query vertices through one "
                          "compiled executable (see --sources)")
+    ap.add_argument("--cache-stats", action="store_true",
+                    help="print the executable-cache statistics "
+                         "(entries, hits/misses, evictions, per-entry "
+                         "bucket shapes) after the run")
     return ap.parse_args(argv)
 
 
@@ -90,6 +94,17 @@ def build_spec(name: str, hg, iters: int):
     if name == "connected_components":
         return alg.connected_components_spec(hg, max_iters=iters)
     raise ValueError(name)
+
+
+def _print_cache_stats(engine) -> None:
+    s = engine.cache_stats()
+    print(f"cache: entries={s['entries']}/{s['capacity']} "
+          f"hits={s['hits']} misses={s['misses']} "
+          f"evictions={s['evictions']} traces={s['traces']}")
+    for meta in s["entry_shapes"]:
+        print(f"  entry: {meta}")
+    if s.get("disk") is not None:
+        print(f"  disk: {s['disk']}")
 
 
 def main(argv=None) -> int:
@@ -184,7 +199,7 @@ def main(argv=None) -> int:
         print(f"served {len(queries)} queries: cold {cold_s:.3f}s "
               f"({len(queries) / cold_s:.1f} q/s incl. compile), warm "
               f"{warm_s:.3f}s ({len(queries) / warm_s:.1f} q/s)")
-        print(f"cache: {engine.cache_stats()}")
+        _print_cache_stats(engine)
         leaves = jax.tree.leaves(res.value)
         first = np.asarray(leaves[0])
         for i, q in enumerate(queries[:4]):
@@ -210,6 +225,8 @@ def main(argv=None) -> int:
     leaves = jax.tree.leaves(res.value)
     print(f"result: {len(leaves)} output array(s); "
           f"first = {np.asarray(leaves[0]).ravel()[:6]}")
+    if args.cache_stats:
+        _print_cache_stats(engine)
     return 0
 
 

@@ -1,4 +1,8 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens.
+"""Batched LM serving driver: prefill a prompt batch, then decode N tokens.
+
+Naming note: this is the *LM decode* entry point (transformer stack).
+Hypergraph query serving — the coalescing front-end over
+``Engine.compile`` — lives in ``repro.launch.serve_hypergraph``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --smoke \
       --batch 4 --prompt-len 32 --gen 16

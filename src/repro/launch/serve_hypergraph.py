@@ -1,0 +1,177 @@
+"""Hypergraph query serving: replay a mixed trace through the serve tier.
+
+Naming note: ``repro.launch.serve`` is the *LM decode* driver (prefill +
+token generation for the transformer stack); THIS module is the
+*hypergraph analytics* serving entry point, built on ``repro.serve``
+(async front-end + coalescing batcher + persistent executable cache)
+over the compile-once seam (``Engine.compile``).
+
+Replays a mixed SSSP / PPR (random-walk) request trace against one
+generated dataset:
+
+  PYTHONPATH=src python -m repro.launch.serve_hypergraph \
+      --regime dblp --scale 0.003 --requests 200 \
+      --max-batch 16 --max-delay-ms 5
+
+  # replica boot from the persistent cache (second run is warm):
+  REPRO_CACHE_DIR=/tmp/repro-cache \
+  PYTHONPATH=src python -m repro.launch.serve_hypergraph --warm
+
+Flags of note: ``--mix`` sets the SSSP fraction of the trace;
+``--no-warm`` skips the boot-time ``serve.warm`` pass (first requests
+then pay the compile); ``--cache-dir`` / ``$REPRO_CACHE_DIR`` place the
+on-disk executable store; ``--verify`` cross-checks a sample of served
+results bitwise against sequential ``CompiledAlgorithm.run``.
+
+The device-count env fix must run before any jax import, hence the
+module-level pattern shared with ``repro.launch.hypergraph``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regime", default="dblp",
+                    help="dataset regime (apache/dblp/friendster/orkut)")
+    ap.add_argument("--scale", type=float, default=0.003)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=12,
+                    help="superstep budget per query")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="forced host device count (1 = local execution)")
+    ap.add_argument("--requests", type=int, default=200,
+                    help="trace length (mixed across algorithms)")
+    ap.add_argument("--mix", type=float, default=0.6,
+                    help="fraction of the trace that is SSSP "
+                         "(the rest is PPR / random-walk)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="coalescing batch bucket per registered path")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="max queue wait before a partial flush")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent executable cache dir "
+                         "(default $REPRO_CACHE_DIR or .repro_cache/)")
+    ap.add_argument("--no-warm", dest="warm", action="store_false",
+                    help="skip the boot-time warmup pass")
+    ap.add_argument("--warm", dest="warm", action="store_true",
+                    default=True)
+    ap.add_argument("--verify", type=int, default=8,
+                    help="cross-check N served results bitwise against "
+                         "sequential run (0 = skip)")
+    ap.add_argument("--log-every-s", type=float, default=5.0)
+    ap.add_argument("--json", action="store_true",
+                    help="dump the full stats snapshot as JSON")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse(argv)
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+    import numpy as np
+
+    from repro import algorithms as alg
+    from repro.core import Engine
+    from repro.data import make_dataset
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import DiskExecutableCache, Frontend, warm
+
+    hg = make_dataset(args.regime, scale=args.scale, seed=args.seed)
+    print(f"{args.regime}: |V|={hg.n_vertices} |E|={hg.n_hyperedges} "
+          f"nnz={hg.nnz}")
+
+    mesh = make_host_mesh(args.devices) if args.devices > 1 else None
+    engine = Engine(
+        mesh=mesh, disk_cache=DiskExecutableCache(args.cache_dir),
+    )
+    specs = {
+        "sssp": alg.shortest_paths_spec(hg, source=0,
+                                        max_iters=args.iters),
+        "ppr": alg.random_walk_spec(hg, iters=args.iters),
+    }
+
+    if args.warm:
+        report = warm(
+            engine, list(specs.values()),
+            batch_sizes=(args.max_batch,),
+            queries=[0, 0],  # ppr has no query0; seed vertex 0
+        )
+        print(f"warm boot: {report['boot_s']:.3f}s, "
+              f"{report['traces']} traces, "
+              f"{report['from_disk']} from disk, "
+              f"{report['compiled']} compiled")
+
+    fe = Frontend(
+        engine, max_batch=args.max_batch,
+        max_delay_ms=args.max_delay_ms, log_every_s=args.log_every_s,
+    )
+    for key, spec in specs.items():
+        fe.register(key, spec)
+
+    rng = np.random.default_rng(args.seed)
+    trace = [
+        ("sssp" if rng.random() < args.mix else "ppr",
+         int(rng.integers(0, hg.n_vertices)))
+        for _ in range(args.requests)
+    ]
+
+    t0 = time.perf_counter()
+    with fe:
+        futs = [(key, q, fe.submit(key, query=q)) for key, q in trace]
+        results = [(key, q, f.result()) for key, q, f in futs]
+    wall_s = time.perf_counter() - t0
+
+    st = fe.stats()
+    print(f"served {len(results)} requests in {wall_s:.3f}s "
+          f"({len(results) / wall_s:.1f} q/s sustained)")
+    print(f"  wait    p50={st['queue_wait']['p50_s'] * 1e3:.2f}ms "
+          f"p99={st['queue_wait']['p99_s'] * 1e3:.2f}ms")
+    print(f"  execute p50={st['execute']['p50_s'] * 1e3:.2f}ms "
+          f"p99={st['execute']['p99_s'] * 1e3:.2f}ms")
+    print(f"  flushes {st['flush_reasons']}")
+    for bucket, occ in st["buckets"].items():
+        print(f"  bucket {bucket}: {occ['flushes']} flushes, "
+              f"occupancy {occ['mean_occupancy']:.2f}")
+    print(f"  engine cache: entries={st['engine_cache']['entries']} "
+          f"hits={st['engine_cache']['hits']} "
+          f"traces={st['engine_cache']['traces']}")
+    if st["disk_cache"] is not None:
+        d = st["disk_cache"]
+        print(f"  disk cache:   entries={d['entries']} "
+              f"hits={d['disk_hits']} stores={d['disk_stores']} "
+              f"({d['dir']})")
+
+    if args.verify:
+        idx = rng.choice(len(results), size=min(args.verify, len(results)),
+                         replace=False)
+        for i in idx:
+            key, q, served = results[i]
+            seq = fe.compiled(key).run(query=q)
+            for a, b in zip(jax.tree.leaves(seq.value),
+                            jax.tree.leaves(served.value)):
+                if not np.array_equal(np.asarray(a), np.asarray(b),
+                                      equal_nan=True):
+                    print(f"VERIFY FAILED: {key} query={q}",
+                          file=sys.stderr)
+                    return 1
+        print(f"verified {len(idx)} served results bitwise vs "
+              f"sequential run")
+
+    if args.json:
+        print(json.dumps(st, indent=2, sort_keys=True, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,8 @@
 """Task builders: (arch x shape x mesh) -> lowerable step + shardings.
 
+These build *LM/GNN* tasks (train / decode-serve / dryrun); hypergraph
+query serving has its own entry, ``repro.launch.serve_hypergraph``.
+
 ``build_task`` is the single entry the dry-run, the roofline harness and
 the trainers share.  ``input_specs`` returns ShapeDtypeStruct stand-ins —
 weak-type-correct, shardable, zero allocation; abstract parameters come

@@ -1,0 +1,49 @@
+"""The serving tier: an async request front-end on the compile-once seam.
+
+``Engine.compile`` (PR 3) made one executable serve many queries — but
+only for hand-assembled homogeneous batches, with an executable cache
+that dies with the process.  This package turns that seam into a
+request-serving subsystem, in three layers:
+
+* ``cache``    — a persistent cross-process executable store
+  (``DiskExecutableCache``): compiled XLA executables serialized to
+  disk keyed by a stable digest of ``serving.signature``, so a fresh
+  replica boots to warm-path throughput without recompiling
+  (``warm(engine, specs)``).  Falls back to a trace-recipe warmup
+  record where the platform can't round-trip serialized executables.
+* ``queue``    — the coalescing batcher (``CoalescingBatcher``): groups
+  heterogeneous in-flight queries by (compiled path, hypergraph),
+  admits per group up to the batch bucket, and flushes on deadline or
+  full batch.  Pure, clock-injected, jit-free — property-testable
+  without touching jax.
+* ``frontend`` — the submission API (``Frontend.submit(spec_key, hg,
+  query, deadline_ms) -> Future``): a worker thread drains the batcher
+  into ``CompiledAlgorithm.run_batch`` continuously and fans results
+  back out to per-request futures, bitwise identical to sequential
+  ``CompiledAlgorithm.run`` calls.
+* ``metrics``  — latency observability (``ServeMetrics``): p50/p99/p999
+  histograms split queue-wait vs execute, per-bucket occupancy, flush
+  reasons, cache hit/miss/eviction/disk counters — exposed as
+  ``Frontend.stats()`` and a periodic log line.
+
+Entry points: ``repro.launch.serve_hypergraph`` (mixed SSSP/PPR replay
+loop) and ``benchmarks/bench_serve_tier.py`` (sustained q/s, p99, boot
+times -> ``BENCH_serve_tier.json``).
+"""
+from repro.serve.cache import DiskExecutableCache, stable_digest, warm
+from repro.serve.frontend import Frontend, ServedResult
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.queue import CoalescingBatcher, Flush, Request
+
+__all__ = [
+    "CoalescingBatcher",
+    "DiskExecutableCache",
+    "Flush",
+    "Frontend",
+    "LatencyHistogram",
+    "Request",
+    "ServedResult",
+    "ServeMetrics",
+    "stable_digest",
+    "warm",
+]

@@ -1,0 +1,382 @@
+"""Persistent cross-process executable cache + replica-boot warmup.
+
+The Engine's executable LRU (``Engine._exec_cache``) is per-process:
+every replica of a serving fleet re-pays the cold compile that
+``BENCH_serving.json`` measures at ~144x the warm-path cost.  This
+module closes that gap:
+
+* ``stable_digest(key)`` maps a ``repro.core.serving.signature`` tuple —
+  which keys programs by *object identity* in memory — onto a digest
+  that is stable ACROSS processes running the same code: functions
+  contribute their qualified name, bytecode and closure values instead
+  of their id.
+* ``DiskExecutableCache`` stores serialized XLA executables
+  (``jax.experimental.serialize_executable``) under
+  ``$REPRO_CACHE_DIR`` (default ``.repro_cache/``), namespaced by
+  platform / device count / jax version so a blob is only ever loaded
+  into the environment that produced it.  Where the platform cannot
+  round-trip a serialized executable, ``store`` degrades to a
+  *warmup record* — a marker telling the next boot to re-trace eagerly
+  rather than on first request — so ``warm`` keeps its contract.
+* ``warm(engine, specs)`` is the replica-boot API: compile every spec
+  and materialize its executables — deserializing from disk (ZERO
+  retraces, asserted by tests) or AOT-compiling and populating the
+  store for the next replica.
+
+The Engine integration is one seam: when ``Engine.disk_cache`` is set,
+``Engine._executable_for`` wraps each freshly-built executable in
+``_DiskBackedExecutable``, which resolves disk-load vs AOT-compile
+lazily on first use (the call site in ``serving._execute`` is unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pickle
+import tempfile
+import time
+import types
+from functools import partial
+from pathlib import Path
+from typing import Any, Iterable
+
+import numpy as np
+
+_SCHEMA = 1
+_FORMAT_EXECUTABLE = "xla-executable"
+_FORMAT_WARMUP = "warmup-record"
+DEFAULT_CACHE_DIR = ".repro_cache"
+
+
+def cache_root(path: str | os.PathLike | None = None) -> Path:
+    """The on-disk cache location: explicit path, else ``$REPRO_CACHE_DIR``,
+    else ``.repro_cache/`` under the working directory (gitignored)."""
+    return Path(
+        path or os.environ.get("REPRO_CACHE_DIR") or DEFAULT_CACHE_DIR
+    )
+
+
+# --------------------------------------------------------------------------
+# stable signature digests
+# --------------------------------------------------------------------------
+
+def _hash_code(code: types.CodeType, h) -> None:
+    h.update(code.co_code)
+    h.update(repr(code.co_names).encode())
+    h.update(repr(code.co_varnames).encode())
+    for const in code.co_consts:
+        if isinstance(const, types.CodeType):
+            _hash_code(const, h)
+        else:
+            h.update(repr(const).encode())
+
+
+def _hash_function(fn, h) -> None:
+    """Qualified name + bytecode + closure values: two processes running
+    the same source produce the same token; an edited algorithm (or a
+    different closed-over constant, e.g. ``alpha``) changes it."""
+    h.update(f"fn:{fn.__module__}:{fn.__qualname__}".encode())
+    code = getattr(fn, "__code__", None)
+    if code is not None:
+        _hash_code(code, h)
+    for cell in fn.__closure__ or ():
+        try:
+            _token(cell.cell_contents, h)
+        except ValueError:  # an unhashable self-reference: name only
+            h.update(b"cell:opaque")
+    defaults = getattr(fn, "__defaults__", None)
+    if defaults:
+        _token(defaults, h)
+
+
+def _token(obj: Any, h) -> None:
+    """Fold one signature component into the hash, by value."""
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        h.update(f"{type(obj).__name__}:{obj!r}".encode())
+    elif isinstance(obj, partial):
+        h.update(b"partial")
+        _hash_function(obj.func, h)
+        _token(obj.args, h)
+        _token(tuple(sorted(obj.keywords.items())), h)
+    elif isinstance(obj, types.FunctionType) or isinstance(
+        obj, types.MethodType
+    ):
+        _hash_function(
+            obj.__func__ if isinstance(obj, types.MethodType) else obj, h
+        )
+    elif isinstance(obj, dict):
+        h.update(b"dict")
+        for k in sorted(obj, key=repr):
+            _token(k, h)
+            _token(obj[k], h)
+    elif isinstance(obj, (tuple, list)):
+        h.update(f"seq:{len(obj)}".encode())
+        for item in obj:
+            _token(item, h)
+    elif isinstance(obj, np.ndarray):
+        h.update(f"nd:{obj.dtype}:{obj.shape}".encode())
+        h.update(np.ascontiguousarray(obj).tobytes())
+    elif hasattr(obj, "dtype") and hasattr(obj, "shape"):  # jax array
+        _token(np.asarray(obj), h)
+    elif dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        # Program / Monoid / spec-level containers: field-by-field, so
+        # function-valued fields hash by bytecode, not memory address.
+        h.update(
+            f"dc:{type(obj).__module__}.{type(obj).__qualname__}".encode()
+        )
+        for field in dataclasses.fields(obj):
+            h.update(field.name.encode())
+            _token(getattr(obj, field.name), h)
+    elif callable(obj) and hasattr(obj, "__qualname__"):
+        # builtins / callables without python code objects
+        h.update(
+            f"call:{getattr(obj, '__module__', '?')}:"
+            f"{obj.__qualname__}".encode()
+        )
+    else:
+        # treedefs, enums, misc hashables: their repr is stable for the
+        # types the serving signature actually contains.
+        h.update(
+            f"obj:{type(obj).__module__}.{type(obj).__qualname__}:"
+            f"{obj!r}".encode()
+        )
+
+
+def stable_digest(key: Any) -> str:
+    """A cross-process digest of an executable-cache signature tuple."""
+    h = hashlib.sha256()
+    _token(key, h)
+    return h.hexdigest()
+
+
+# --------------------------------------------------------------------------
+# the disk store
+# --------------------------------------------------------------------------
+
+class DiskExecutableCache:
+    """Serialize compiled executables to a per-platform on-disk store.
+
+    >>> engine = Engine(disk_cache=DiskExecutableCache())
+    >>> warm(engine, [spec], batch_sizes=(8,))   # boot: load or compile
+    >>> engine.compile(spec).run_batch(queries)  # zero retraces if warm
+
+    Blobs live under ``<root>/<platform>-<ndev>dev-jax<version>-v<N>/``:
+    an executable is only ever deserialized into the environment shape
+    that produced it.  Every entry is either a serialized executable or
+    a warmup record (the fallback where ``serialize_executable`` cannot
+    round-trip this platform's executables); records never satisfy
+    ``load`` but tell ``warm`` the compile is expected and intentional.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        import jax
+
+        self.root = cache_root(path)
+        self.dir = self.root / (
+            f"{jax.default_backend()}-{jax.device_count()}dev-"
+            f"jax{jax.__version__}-v{_SCHEMA}"
+        )
+        self._stats = {
+            "disk_hits": 0,
+            "disk_misses": 0,
+            "disk_stores": 0,
+            "disk_errors": 0,
+            "warm_records": 0,
+        }
+
+    # -- paths -------------------------------------------------------------
+
+    def _path(self, digest: str) -> Path:
+        return self.dir / f"{digest}.jexe"
+
+    def _write(self, digest: str, payload: dict) -> None:
+        """Atomic publish: a concurrently-booting replica never reads a
+        torn blob."""
+        self.dir.mkdir(parents=True, exist_ok=True)
+        blob = pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(digest))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- load / store ------------------------------------------------------
+
+    def load(self, key: Any):
+        """A loaded ``jax.stages.Compiled`` for ``key``, or ``None``.
+
+        Loading never traces: the deserialized executable answers the
+        first request at warm-path cost (the zero-retrace boot
+        property the serve-tier tests assert)."""
+        digest = stable_digest(key)
+        path = self._path(digest)
+        if not path.exists():
+            self._stats["disk_misses"] += 1
+            return None
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+            if payload.get("format") != _FORMAT_EXECUTABLE:
+                self._stats["warm_records"] += 1
+                self._stats["disk_misses"] += 1
+                return None
+            from jax.experimental import serialize_executable as se
+
+            compiled = se.deserialize_and_load(
+                payload["serialized"], payload["in_tree"],
+                payload["out_tree"],
+            )
+        except Exception:  # corrupt blob / incompatible runtime
+            self._stats["disk_errors"] += 1
+            self._stats["disk_misses"] += 1
+            return None
+        self._stats["disk_hits"] += 1
+        return compiled
+
+    def store(self, key: Any, compiled) -> bool:
+        """Serialize ``compiled`` under ``key``; on platforms that cannot
+        round-trip executables, degrade to a warmup record so the next
+        boot knows to re-trace eagerly.  Returns True on a full store."""
+        digest = stable_digest(key)
+        try:
+            from jax.experimental import serialize_executable as se
+
+            serialized, in_tree, out_tree = se.serialize(compiled)
+            self._write(digest, {
+                "format": _FORMAT_EXECUTABLE,
+                "schema": _SCHEMA,
+                "serialized": serialized,
+                "in_tree": in_tree,
+                "out_tree": out_tree,
+            })
+        except Exception as err:
+            self._stats["disk_errors"] += 1
+            try:
+                self._write(digest, {
+                    "format": _FORMAT_WARMUP,
+                    "schema": _SCHEMA,
+                    "error": repr(err),
+                })
+            except Exception:
+                pass
+            return False
+        self._stats["disk_stores"] += 1
+        return True
+
+    def wrap(self, engine, key: Any, jitted):
+        """Engine seam: wrap a freshly-built jitted executable so its
+        first use resolves disk-load vs AOT-compile (see
+        ``Engine._executable_for``)."""
+        return _DiskBackedExecutable(self, key, jitted)
+
+    def stats(self) -> dict:
+        entries = 0
+        if self.dir.is_dir():
+            entries = sum(1 for _ in self.dir.glob("*.jexe"))
+        return {**self._stats, "entries": entries, "dir": str(self.dir)}
+
+
+class _DiskBackedExecutable:
+    """An Engine LRU entry backed by the disk store.
+
+    First use resolves, in order: deserialize from disk (no trace, no
+    compile), else AOT ``lower().compile()`` + store for the next
+    process, else (unloweable args) fall back to the plain jitted
+    callable.  ``source`` records which path won, for observability.
+    """
+
+    __slots__ = ("cache", "key", "jitted", "compiled", "source")
+
+    def __init__(self, cache: DiskExecutableCache, key, jitted):
+        self.cache = cache
+        self.key = key
+        self.jitted = jitted
+        self.compiled = None
+        self.source = None
+
+    def _materialize(self, args: tuple) -> None:
+        if self.compiled is not None:
+            return
+        loaded = self.cache.load(self.key)
+        if loaded is not None:
+            self.compiled, self.source = loaded, "disk"
+            return
+        try:
+            compiled = self.jitted.lower(*args).compile()
+        except Exception:
+            # Can't AOT-lower these args (exotic pytrees, platform
+            # quirks): serve through plain jit, skip persistence.
+            self.compiled, self.source = self.jitted, "jit"
+            return
+        self.compiled, self.source = compiled, "aot"
+        self.cache.store(self.key, compiled)
+
+    def warm(self, args: tuple) -> str:
+        """Materialize without executing; returns the winning source."""
+        self._materialize(args)
+        return self.source
+
+    def __call__(self, *args):
+        self._materialize(args)
+        return self.compiled(*args)
+
+
+# --------------------------------------------------------------------------
+# replica-boot warmup
+# --------------------------------------------------------------------------
+
+def warm(
+    engine,
+    specs: Iterable[Any],
+    *,
+    batch_sizes: tuple[int, ...] = (),
+    queries: list[Any] | None = None,
+    hg=None,
+) -> dict:
+    """Boot-time warmup: bring ``engine`` to warm-path q/s before the
+    first request.
+
+    For each spec (an ``AlgorithmSpec``, or an already-compiled
+    ``CompiledAlgorithm``) materialize the unbatched executable plus one
+    per batch bucket in ``batch_sizes`` — loading from the engine's
+    ``disk_cache`` when the store holds the signature (zero retraces)
+    and AOT-compiling (and storing) otherwise.
+
+    ``queries``: per-spec example query for specs whose ``query0`` is
+    unset (e.g. an unseeded ``random_walk_spec``); ignored where the
+    spec carries its own.  Returns a report::
+
+        {"boot_s": ..., "traces": ..., "paths": {name: {path: source}}}
+
+    where each source is ``disk`` (deserialized), ``aot`` (compiled +
+    stored), or ``jit`` (no disk cache attached / unloweable).
+    """
+    t0 = time.perf_counter()
+    before = engine.cache_stats()["traces"]
+    paths: dict[str, dict] = {}
+    for i, item in enumerate(specs):
+        compiled = item if hasattr(item, "warmup") else engine.compile(item)
+        example = None
+        if queries is not None and i < len(queries):
+            example = queries[i]
+        name = getattr(compiled.spec, "name", f"spec{i}")
+        paths[f"{i}:{name}"] = compiled.warmup(
+            query=example, batch_sizes=batch_sizes, hg=hg
+        )
+    sources = [
+        rep.get("source") for per in paths.values() for rep in per.values()
+    ]
+    return {
+        "boot_s": time.perf_counter() - t0,
+        "traces": engine.cache_stats()["traces"] - before,
+        "from_disk": sum(1 for s in sources if s == "disk"),
+        "compiled": sum(1 for s in sources if s == "aot"),
+        "paths": paths,
+    }

@@ -1,0 +1,350 @@
+"""The async request front-end: ``submit`` one query, get a ``Future``.
+
+``Frontend`` is the user-facing layer of the serving tier.  It owns
+
+* a registry of **compiled paths** (``register(spec_key, spec)`` ->
+  ``Engine.compile``),
+* a ``CoalescingBatcher`` grouping in-flight queries by
+  ``(spec_key, hypergraph)``,
+* one **worker thread** that continuously drains due batches into
+  ``CompiledAlgorithm.run_batch`` and fans the rows back out to
+  per-request futures,
+* ``ServeMetrics`` for the wait/execute latency split, bucket
+  occupancy and flush accounting (``stats()``).
+
+Correctness contract: a request's resolved value is **bitwise identical
+to a sequential ``CompiledAlgorithm.run(query=...)``** of the same query
+— coalescing, batch padding and fan-out never touch the numbers
+(``run_batch``'s own bitwise-vs-sequential guarantee carries through
+row slicing).  Asserted by ``tests/test_serve.py`` on the local and
+sharded backends.
+
+Determinism for tests: the batcher is pure and the clock injectable;
+an unstarted front-end can be driven synchronously with ``pump()``
+(no thread, no sleeps), which the jit-free property tests use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any
+
+import numpy as np
+
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import CoalescingBatcher, Flush
+
+DEFAULT_MAX_BATCH = 32
+DEFAULT_MAX_DELAY_MS = 5.0
+
+
+@dataclasses.dataclass
+class ServedResult:
+    """What a request's ``Future`` resolves to.
+
+    ``value`` is the spec's extracted output for THIS query (leading
+    batch axis already sliced off, leaves as numpy arrays).  The rest is
+    per-request observability: how long the query waited for
+    co-batchable traffic, how long its batch executed, why and how full
+    the batch flushed.
+    """
+
+    value: Any
+    queue_wait_s: float
+    execute_s: float
+    flush_reason: str
+    batch_size: int
+    batch_bucket: int
+    group: Any
+    supersteps_executed: int | None = None
+
+
+class _Path:
+    """One registered compiled algorithm (a ``spec_key``)."""
+
+    __slots__ = ("key", "compiled", "max_batch")
+
+    def __init__(self, key, compiled, max_batch):
+        self.key = key
+        self.compiled = compiled
+        self.max_batch = max_batch
+
+
+class Frontend:
+    """Coalescing request front-end over one ``Engine``.
+
+    >>> fe = Frontend(engine, max_batch=32, max_delay_ms=5)
+    >>> fe.register("sssp", shortest_paths_spec(hg, 0, 32))
+    >>> fe.register("ppr", random_walk_spec(hg, iters=20))
+    >>> with fe:                      # starts the worker thread
+    ...     futs = [fe.submit("sssp", query=s) for s in sources]
+    ...     results = [f.result() for f in futs]
+    >>> fe.stats()                    # latency split, occupancy, caches
+
+    ``max_batch`` should be the batch bucket the executables were
+    warmed at (a power of two): a full flush then runs at occupancy 1.0
+    while partial (deadline) flushes pad up to the same bucket set.
+    """
+
+    def __init__(
+        self,
+        engine,
+        *,
+        max_batch: int = DEFAULT_MAX_BATCH,
+        max_delay_ms: float = DEFAULT_MAX_DELAY_MS,
+        log_every_s: float | None = None,
+        clock=time.monotonic,
+    ):
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.max_delay_s = float(max_delay_ms) / 1e3
+        self.clock = clock
+        self.metrics = ServeMetrics(log_every_s=log_every_s)
+        self._paths: dict[Any, _Path] = {}
+        self._batcher = CoalescingBatcher(
+            capacity=lambda group: self._paths[group[0]].max_batch
+        )
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._thread: threading.Thread | None = None
+        self._stop = False
+        self._closed = False
+
+    # -- registration ------------------------------------------------------
+
+    def register(
+        self, spec_key: Any, spec, *, max_batch: int | None = None,
+        **overrides,
+    ):
+        """Register a servable path: an ``AlgorithmSpec`` (compiled via
+        ``engine.compile(spec, **overrides)``) or anything already
+        exposing ``run_batch`` (a ``CompiledAlgorithm``, or a test
+        double).  Returns the compiled handle."""
+        if hasattr(spec, "run_batch"):
+            compiled = spec
+        else:
+            if getattr(spec, "bind_query", None) is None:
+                raise ValueError(
+                    f"spec {getattr(spec, 'name', spec)!r} has no "
+                    "bind_query: the front-end batches per-request "
+                    "queries; declare the query axis"
+                )
+            compiled = self.engine.compile(spec, **overrides)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("front-end is closed")
+            if spec_key in self._paths:
+                raise ValueError(f"spec_key {spec_key!r} already registered")
+            self._paths[spec_key] = _Path(
+                spec_key, compiled, int(max_batch or self.max_batch)
+            )
+        return compiled
+
+    def compiled(self, spec_key: Any):
+        return self._paths[spec_key].compiled
+
+    # -- submission --------------------------------------------------------
+
+    def submit(
+        self,
+        spec_key: Any,
+        hg=None,
+        query: Any = None,
+        deadline_ms: float | None = None,
+    ) -> Future:
+        """Enqueue one query; resolves to a ``ServedResult``.
+
+        ``hg``: serve against this (same-shape-bucket) hypergraph
+        instead of the spec's own; queries only coalesce within one
+        hypergraph.  ``deadline_ms`` bounds this request's queue wait —
+        when it expires the batch flushes with whatever co-arrived
+        (default: the front-end's ``max_delay_ms``)."""
+        if spec_key not in self._paths:
+            raise KeyError(
+                f"unknown spec_key {spec_key!r}; register() it first"
+            )
+        deadline_s = (
+            self.max_delay_s if deadline_ms is None else deadline_ms / 1e3
+        )
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("front-end is closed")
+            self._batcher.submit(
+                (spec_key, id(hg) if hg is not None else 0),
+                query,
+                now=self.clock(),
+                deadline_s=deadline_s,
+                hg=hg,
+                future=fut,
+            )
+            self._cond.notify()
+        self.metrics.note_submit()
+        return fut
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "Frontend":
+        if self._thread is None:
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._worker, name="repro-serve-frontend",
+                daemon=True,
+            )
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Stop accepting, drain every pending request, stop the worker."""
+        with self._cond:
+            self._closed = True
+            self._stop = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.pump(drain=True)  # whatever the worker didn't get to
+
+    def __enter__(self) -> "Frontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- execution ---------------------------------------------------------
+
+    def pump(self, *, drain: bool = False) -> int:
+        """Synchronously execute every due flush on the caller's thread.
+
+        The single-threaded serving mode: property tests (fake clock,
+        no sleeps) and simple replay loops call ``pump`` instead of
+        ``start``.  ``drain=True`` also flushes not-yet-due groups."""
+        n = 0
+        while True:
+            with self._lock:
+                flush = self._batcher.poll(self.clock())
+                due = (
+                    [flush] if flush is not None
+                    else self._batcher.drain() if drain
+                    else []
+                )
+            if not due:
+                return n
+            for f in due:
+                self._run_flush(f)
+                n += 1
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                flush = None
+                while not self._stop:
+                    flush = self._batcher.poll(self.clock())
+                    if flush is not None:
+                        break
+                    horizon = self._batcher.next_deadline()
+                    self._cond.wait(
+                        timeout=None
+                        if horizon is None
+                        else max(horizon - self.clock(), 0.0)
+                    )
+                if flush is None and self._stop:
+                    flushes = self._batcher.drain()
+                    for f in flushes:
+                        self._run_flush(f)
+                    return
+            self._run_flush(flush)
+            self.metrics.maybe_log(self.clock())
+
+    def _run_flush(self, flush: Flush) -> None:
+        from repro.core.serving import BATCH_FLOOR, bucket_dim
+
+        path = self._paths[flush.group[0]]
+        reqs = flush.requests
+        dispatch = self.clock()
+        waits = [dispatch - r.arrival for r in reqs]
+        b = len(reqs)
+        bucket = bucket_dim(b, floor=BATCH_FLOOR)
+        try:
+            queries = _stack([r.query for r in reqs])
+            res = path.compiled.run_batch(queries, hg=flush.hg)
+            value = res.value
+            _block(value)
+        except Exception as err:  # noqa: BLE001 - fanned out to futures
+            self.metrics.note_flush(
+                flush.group[0], flush.reason, b, bucket, waits,
+                self.clock() - dispatch, error=True,
+            )
+            for r in reqs:
+                if r.future is not None:
+                    r.future.set_exception(err)
+            return
+        execute_s = self.clock() - dispatch
+        executed = getattr(res, "supersteps_executed", None)
+        executed = int(np.asarray(executed)) if executed is not None else None
+        self.metrics.note_flush(
+            flush.group[0], flush.reason, b, bucket, waits, execute_s,
+        )
+        rows = _unstack(value, b)
+        for i, r in enumerate(reqs):
+            if r.future is None:
+                continue
+            r.future.set_result(ServedResult(
+                value=rows[i],
+                queue_wait_s=waits[i],
+                execute_s=execute_s,
+                flush_reason=flush.reason,
+                batch_size=b,
+                batch_bucket=bucket,
+                group=flush.group[0],
+                supersteps_executed=executed,
+            ))
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """One snapshot across all three layers: front-end latency /
+        occupancy, the Engine's executable cache, and the disk store."""
+        snap = self.metrics.snapshot()
+        engine_stats = None
+        if hasattr(self.engine, "cache_stats"):
+            engine_stats = self.engine.cache_stats()
+        snap["engine_cache"] = engine_stats
+        disk = getattr(self.engine, "disk_cache", None)
+        snap["disk_cache"] = disk.stats() if disk is not None else None
+        return snap
+
+
+# -- pytree batch helpers (no jax import needed for the pure tests) --------
+
+def _stack(queries: list[Any]):
+    """Stack B query pytrees into one batched pytree (leading axis B)."""
+    import jax
+
+    return jax.tree.map(
+        lambda *leaves: np.stack([np.asarray(x) for x in leaves]),
+        *queries,
+    )
+
+
+def _unstack(value: Any, b: int) -> list[Any]:
+    """Split a batched result pytree into B per-request pytrees."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(value)
+    leaves = [np.asarray(leaf) for leaf in leaves]
+    return [
+        jax.tree.unflatten(treedef, [leaf[i] for leaf in leaves])
+        for i in range(b)
+    ]
+
+
+def _block(value: Any) -> None:
+    try:
+        import jax
+
+        jax.block_until_ready(value)
+    except Exception:  # numpy-only test doubles
+        pass

@@ -1,0 +1,176 @@
+"""Latency observability for the serving tier.
+
+Log-spaced histograms (p50/p99/p999 without storing samples) split into
+the two halves a serving operator actually tunes against:
+
+* **queue wait** — admission to dispatch: the price of coalescing.
+  Grows with ``max_delay_ms`` and shrinks with traffic (fuller buckets
+  flush sooner).
+* **execute** — dispatch to results-ready: the price of the compiled
+  batch itself.  Flat per bucket on the warm path; a spike here means a
+  retrace / cache miss.
+
+Plus per-bucket occupancy (how full each flushed batch bucket ran —
+low occupancy = paying padded execution for empty slots), flush-reason
+counters, and the engine/disk cache counters merged into one
+``snapshot()``.  ``maybe_log`` emits a one-line summary at a bounded
+rate for long-running serve loops.
+"""
+from __future__ import annotations
+
+import bisect
+import logging
+import math
+import threading
+from collections import Counter
+from typing import Any
+
+log = logging.getLogger("repro.serve")
+
+# Histogram bin upper bounds: 1us .. ~4600s, quarter-decade spacing —
+# ~2x resolution per bin, 40 bins, fixed memory.
+_BOUNDS = [1e-6 * (10 ** (i / 4)) for i in range(40)]
+
+
+class LatencyHistogram:
+    """Fixed-bin log histogram over seconds; quantiles report the upper
+    bound of the covering bin (<= ~78% relative overestimate at
+    quarter-decade spacing — plenty for p50-vs-p999 shape)."""
+
+    def __init__(self):
+        self._counts = [0] * (len(_BOUNDS) + 1)
+        self.count = 0
+        self.total = 0.0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        seconds = max(float(seconds), 0.0)
+        self._counts[bisect.bisect_left(_BOUNDS, seconds)] += 1
+        self.count += 1
+        self.total += seconds
+        self.max = max(self.max, seconds)
+
+    def quantile(self, q: float) -> float:
+        """Upper bound of the bin holding the q-quantile (0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        target = math.ceil(q * self.count)
+        seen = 0
+        for i, c in enumerate(self._counts):
+            seen += c
+            if seen >= target:
+                return _BOUNDS[i] if i < len(_BOUNDS) else self.max
+        return self.max
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "mean_s": self.total / self.count if self.count else 0.0,
+            "p50_s": self.quantile(0.50),
+            "p99_s": self.quantile(0.99),
+            "p999_s": self.quantile(0.999),
+            "max_s": self.max,
+        }
+
+
+class ServeMetrics:
+    """The front-end's counters; thread-safe (worker + submitters)."""
+
+    def __init__(self, log_every_s: float | None = None):
+        self._lock = threading.Lock()
+        self.wait = LatencyHistogram()
+        self.execute = LatencyHistogram()
+        self.total = LatencyHistogram()
+        self.flush_reasons: Counter = Counter()
+        # (group key, batch bucket) -> occupancy accounting
+        self.buckets: dict[Any, dict] = {}
+        self.submitted = 0
+        self.completed = 0
+        self.errors = 0
+        self.log_every_s = log_every_s
+        self._last_log = None
+
+    def note_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.submitted += n
+
+    def note_flush(
+        self,
+        group: Any,
+        reason: str,
+        batch: int,
+        bucket: int,
+        wait_s: list[float],
+        execute_s: float,
+        error: bool = False,
+    ) -> None:
+        """One executed batch: per-request waits, one execute span."""
+        with self._lock:
+            self.flush_reasons[reason] += 1
+            b = self.buckets.setdefault(
+                (group, bucket),
+                {"flushes": 0, "requests": 0, "occupancy_sum": 0.0},
+            )
+            b["flushes"] += 1
+            b["requests"] += batch
+            b["occupancy_sum"] += batch / bucket
+            per_req_exec = execute_s
+            for w in wait_s:
+                self.wait.record(w)
+                self.execute.record(per_req_exec)
+                self.total.record(w + per_req_exec)
+            if error:
+                self.errors += batch
+            else:
+                self.completed += batch
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            buckets = {
+                f"{group}/b{bucket}": {
+                    **stats,
+                    "mean_occupancy": (
+                        stats["occupancy_sum"] / stats["flushes"]
+                        if stats["flushes"]
+                        else 0.0
+                    ),
+                }
+                for (group, bucket), stats in sorted(
+                    self.buckets.items(), key=lambda kv: repr(kv[0])
+                )
+            }
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "errors": self.errors,
+                "in_flight": self.submitted - self.completed - self.errors,
+                "queue_wait": self.wait.snapshot(),
+                "execute": self.execute.snapshot(),
+                "total_latency": self.total.snapshot(),
+                "flush_reasons": dict(self.flush_reasons),
+                "buckets": buckets,
+            }
+
+    def maybe_log(self, now: float) -> str | None:
+        """Emit (and return) the periodic one-line summary when
+        ``log_every_s`` has elapsed; None otherwise."""
+        if self.log_every_s is None:
+            return None
+        with self._lock:
+            if (
+                self._last_log is not None
+                and now - self._last_log < self.log_every_s
+            ):
+                return None
+            self._last_log = now
+        snap = self.snapshot()
+        line = (
+            f"serve: {snap['completed']} done / {snap['in_flight']} "
+            f"in-flight | wait p50={snap['queue_wait']['p50_s'] * 1e3:.2f}ms "
+            f"p99={snap['queue_wait']['p99_s'] * 1e3:.2f}ms | exec "
+            f"p50={snap['execute']['p50_s'] * 1e3:.2f}ms "
+            f"p99={snap['execute']['p99_s'] * 1e3:.2f}ms | flushes "
+            f"{dict(snap['flush_reasons'])}"
+        )
+        log.info(line)
+        return line

@@ -1,0 +1,179 @@
+"""The coalescing batcher: heterogeneous requests -> homogeneous batches.
+
+``CompiledAlgorithm.run_batch`` wants B same-signature queries at once;
+real traffic arrives one query at a time, interleaved across algorithms
+and hypergraphs.  ``CoalescingBatcher`` bridges the two:
+
+* requests group by an opaque **group key** — the front-end uses
+  ``(spec_key, hypergraph identity)``, so only queries that share one
+  compiled executable signature ever coalesce;
+* each group **admits** up to its capacity (the batch bucket the
+  executable was compiled for); an arrival that fills the group makes
+  it immediately flushable (reason ``"full"``);
+* a group whose **oldest deadline** has passed is flushable with
+  whatever it holds (reason ``"deadline"`` — the partial-flush path
+  that bounds tail latency);
+* ``drain`` flushes everything regardless (reason ``"drain"`` —
+  shutdown / test pump).
+
+The batcher is intentionally pure plumbing: no threads, no jax, no wall
+clock (callers inject ``now``) — so the coalescing invariants
+(every request flushed exactly once, never above capacity, FIFO within
+a group) are property-testable in microseconds.  Thread-safety and
+execution live in ``repro.serve.frontend``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any
+
+FLUSH_REASONS = ("full", "deadline", "drain")
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight query.
+
+    ``deadline`` is absolute (same clock as ``submit``'s ``now``):
+    the latest instant this request may keep waiting for co-batchable
+    traffic.  ``future`` is whatever completion handle the caller
+    attaches (the front-end uses ``concurrent.futures.Future``; the
+    pure tests use plain lists)."""
+
+    group: Any
+    query: Any
+    arrival: float
+    deadline: float
+    future: Any = None
+    seq: int = 0
+
+
+@dataclasses.dataclass
+class Flush:
+    """One batch handed to the executor: FIFO requests of one group."""
+
+    group: Any
+    requests: list[Request]
+    reason: str
+    hg: Any = None
+
+
+class _Group:
+    __slots__ = ("hg", "pending")
+
+    def __init__(self, hg):
+        self.hg = hg
+        self.pending: list[Request] = []
+
+
+class CoalescingBatcher:
+    """Admission + flush policy over pending request groups.
+
+    ``capacity``: max requests per flush (per group) — the batch bucket.
+    May be an int or a ``key -> int`` callable for per-group buckets.
+    """
+
+    def __init__(self, capacity: Any = 64):
+        self._capacity = capacity
+        self._groups: dict[Any, _Group] = {}
+        self._seq = itertools.count()
+
+    def capacity(self, group_key: Any) -> int:
+        cap = self._capacity
+        cap = cap(group_key) if callable(cap) else cap
+        if cap < 1:
+            raise ValueError(f"capacity for {group_key!r} must be >= 1")
+        return int(cap)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(
+        self,
+        group_key: Any,
+        query: Any,
+        *,
+        now: float,
+        deadline_s: float,
+        hg: Any = None,
+        future: Any = None,
+    ) -> Request:
+        """Admit one request; duplicates of an in-flight query are real
+        requests (each gets its own slot and future)."""
+        req = Request(
+            group=group_key,
+            query=query,
+            arrival=now,
+            deadline=now + deadline_s,
+            future=future,
+            seq=next(self._seq),
+        )
+        grp = self._groups.get(group_key)
+        if grp is None:
+            grp = self._groups[group_key] = _Group(hg)
+        elif grp.hg is not hg and grp.pending:
+            raise ValueError(
+                f"group {group_key!r} has pending requests against a "
+                "different hypergraph; use a distinct group key per "
+                "hypergraph"
+            )
+        else:
+            grp.hg = hg
+        grp.pending.append(req)
+        return req
+
+    # -- flush policy ------------------------------------------------------
+
+    def pending_count(self) -> int:
+        return sum(len(g.pending) for g in self._groups.values())
+
+    def next_deadline(self) -> float | None:
+        """Earliest pending deadline, or None when idle — the worker's
+        sleep horizon."""
+        deadlines = [
+            g.pending[0].deadline
+            for g in self._groups.values()
+            if g.pending
+        ]
+        return min(deadlines) if deadlines else None
+
+    def poll(self, now: float) -> Flush | None:
+        """The next due flush, or None.
+
+        Full groups flush first (they can't improve by waiting); then
+        the group with the OLDEST expired deadline (fairness under
+        sustained overload).  A full group yields exactly ``capacity``
+        requests and keeps the remainder queued with their original
+        deadlines."""
+        full_key = None
+        expired_key, expired_deadline = None, None
+        for key, grp in self._groups.items():
+            if not grp.pending:
+                continue
+            if len(grp.pending) >= self.capacity(key):
+                full_key = key
+                break
+            head = grp.pending[0].deadline
+            if head <= now and (
+                expired_deadline is None or head < expired_deadline
+            ):
+                expired_key, expired_deadline = key, head
+        if full_key is not None:
+            return self._take(full_key, "full")
+        if expired_key is not None:
+            return self._take(expired_key, "deadline")
+        return None
+
+    def drain(self) -> list[Flush]:
+        """Flush every pending request (capacity-sized chunks), FIFO."""
+        flushes = []
+        for key in list(self._groups):
+            while self._groups[key].pending:
+                flushes.append(self._take(key, "drain"))
+        return flushes
+
+    def _take(self, key: Any, reason: str) -> Flush:
+        grp = self._groups[key]
+        cap = self.capacity(key)
+        batch, grp.pending = grp.pending[:cap], grp.pending[cap:]
+        return Flush(group=key, requests=batch, reason=reason, hg=grp.hg)
