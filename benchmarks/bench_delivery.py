@@ -73,6 +73,7 @@ from repro.kernels.deliver import (
     plan_ell_width,
 )
 from repro.kernels.deliver.layout import ClassPlan
+from repro.obs import delivery_calibration
 
 from benchmarks.common import SCALE, emit_json, row
 
@@ -310,6 +311,17 @@ def run() -> None:
             f"degree-class layout regressed single-ELL ({got:.2f}x) "
             f"in {regime}"
         )
+    # Predicted-vs-measured residuals of the traffic model across the
+    # regime table — the calibration record the ROADMAP's item asks
+    # for, refreshed each nightly run alongside the raw timings.
+    results["calibration"] = delivery_calibration(results["regimes"])
+    cal = results["calibration"]["summary"]
+    row(
+        "delivery/calibration", 0.0,
+        f"mean_abs_residual_log2={cal['mean_abs_residual_log2']:.3f};"
+        f"decision_accuracy={cal['decision_accuracy']:.2f};"
+        f"suggested_model_scale={cal['suggested_model_scale']:.3f}",
+    )
     emit_json("delivery", results)
 
 

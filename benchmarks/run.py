@@ -13,6 +13,7 @@ def main() -> None:
         bench_delivery,
         bench_loc,
         bench_motifs,
+        bench_obs,
         bench_partitioning,
         bench_representation,
         bench_roofline,
@@ -33,6 +34,7 @@ def main() -> None:
         ("serving (compile-once serve-many)", bench_serving.run),
         ("serve_tier (front-end + persistent cache)", bench_serve_tier.run),
         ("delivery (fused superstep data path)", bench_delivery.run),
+        ("obs (trace coverage + overhead)", bench_obs.run),
     ]
     failures = 0
     print("name,us_per_call,derived")

@@ -26,6 +26,7 @@ The chosen design point is reported on the returned ``Result`` so callers
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Mapping
 
@@ -35,6 +36,13 @@ import numpy as np
 from repro.core.clique import clique_expansion_size, to_graph
 from repro.core.engine import compute, compute_jit
 from repro.core.hypergraph import HyperGraph
+from repro.obs.calibrate import (
+    delivery_traffic_pair,
+    executed_supersteps,
+    reference_traffic,
+)
+from repro.obs.metrics import default_registry, weak_provider
+from repro.obs.trace import maybe_span
 from repro.kernels.deliver import (
     DELIVERY_MODES,
     layout_pair,
@@ -584,6 +592,8 @@ class Engine:
         config: ExecutionConfig | None = None,
         exec_cache_size: int = 32,
         disk_cache=None,
+        tracer=None,
+        metrics=None,
         **overrides: Any,
     ):
         cfg = config if config is not None else ExecutionConfig()
@@ -616,6 +626,17 @@ class Engine:
         # disk-deserialize vs AOT-compile-and-store.  Core never imports
         # the serve tier — the dependency points the other way.
         self.disk_cache = disk_cache
+        # Observability (repro.obs): an optional span recorder
+        # (duck-typed like disk_cache: anything with span/block) and
+        # the unified metrics registry this Engine's executable-cache
+        # counters surface through.  Both cost NOTHING on hot paths
+        # when unused: span sites branch on ``tracer is None`` and the
+        # registry provider is a weakref pulled only at snapshot time.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else default_registry()
+        self.metrics.register_provider(
+            "engine.exec_cache", weak_provider(self.cache_stats)
+        )
 
     # -- resolution ---------------------------------------------------------
 
@@ -756,9 +777,14 @@ class Engine:
         for c_hg, lay in self._delivery_cache:
             if c_hg is hg:
                 return lay
-        lay = layout_pair(
-            hg.src, hg.dst, hg.e_mask, hg.n_vertices, hg.n_hyperedges
-        )
+        with maybe_span(
+            self.tracer, "engine.layout_build", cat="compile",
+            nnz=int(hg.nnz), n_vertices=int(hg.n_vertices),
+            n_hyperedges=int(hg.n_hyperedges),
+        ):
+            lay = layout_pair(
+                hg.src, hg.dst, hg.e_mask, hg.n_vertices, hg.n_hyperedges
+            )
         self._delivery_cache.append((hg, lay))
         del self._delivery_cache[:-4]  # bound the strong refs we hold
         return lay
@@ -827,6 +853,300 @@ class Engine:
         )
         return resolved, plan, decision
 
+    def explain(self, spec, hg=None, **overrides: Any) -> dict:
+        """The full decision tree for every ``auto`` axis — inputs,
+        per-candidate predicted costs, winner, reason — WITHOUT
+        executing (no compile, no device work).
+
+        Built directly on ``resolve`` (the same call ``run`` and
+        ``compile`` make), so the winners here are BY CONSTRUCTION the
+        axes an actual execution of the same inputs resolves — asserted
+        axis-for-axis in ``tests/test_obs.py``.  On top of the winner,
+        every axis reports the costs of the candidates it did NOT pick,
+        which ``resolve`` alone never surfaces for pinned or gated
+        axes.
+
+        ``hg``: explain against this hypergraph instead of the spec's
+        own (applies ``spec.init`` like ``CompiledAlgorithm.run(hg)``).
+        ``AnalyticsSpec`` routes to the batch axes (kernel /
+        representation / backend / mode).  Returns::
+
+            {"config": resolved ExecutionConfig,
+             "decision": the resolve() decision dict,
+             "axes": {axis: {"winner", "reason", "inputs",
+                             "candidates": {name: {...costs}}}}}
+        """
+        if isinstance(spec, AnalyticsSpec):
+            return self._explain_analytics(spec, **overrides)
+        if hg is not None:
+            hg = spec.init(hg) if spec.init is not None else hg
+            spec = spec._replace(hg0=hg)
+        resolved, plan, decision = self.resolve(spec, **overrides)
+        cfg = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        hg0 = spec.hg0
+        axes: dict[str, Any] = {}
+
+        # -- representation: bipartite vs clique constant-folding ------
+        touches = getattr(spec, "touches_hyperedge_state", True)
+        has_program = getattr(spec, "clique_program", None) is not None
+        eligible = (not touches) and has_program
+        clique_edges = (
+            int(2 * clique_expansion_size(hg0)) if eligible else None
+        )
+        axes["representation"] = {
+            "winner": resolved.representation,
+            "reason": decision["representation"].get("reason"),
+            "inputs": {
+                "touches_hyperedge_state": touches,
+                "has_clique_program": has_program,
+                "nnz": int(hg0.nnz),
+            },
+            "candidates": {
+                "bipartite": {
+                    "eligible": True,
+                    "predicted_cost_edges": int(hg0.nnz),
+                },
+                "clique": {
+                    "eligible": eligible,
+                    "predicted_cost_edges": clique_edges,
+                    "edge_budget": float(
+                        cfg.clique_edge_budget * max(hg0.nnz, 1)
+                    ),
+                },
+            },
+        }
+
+        # -- backend: local vs replicated vs sharded -------------------
+        if plan is None:
+            axes["backend"] = {
+                "winner": resolved.backend,
+                "reason": decision["backend"].get("reason"),
+                "inputs": {"mesh": self.mesh is not None},
+                "candidates": {
+                    "local": {"eligible": True, "predicted_sync_bytes": 0.0},
+                    "replicated": {"eligible": self.mesh is not None},
+                    "sharded": {"eligible": self.mesh is not None},
+                },
+            }
+        else:
+            v_w = state_width_bytes(hg0.v_attr, hg0.n_vertices)
+            he_w = state_width_bytes(hg0.he_attr, hg0.n_hyperedges)
+            _, bwhy = select_backend(
+                plan, hg0.n_vertices, hg0.n_hyperedges,
+                replicated_bias=cfg.replicated_bias,
+                v_state_bytes=v_w, he_state_bytes=he_w,
+            )
+            axes["backend"] = {
+                "winner": resolved.backend,
+                "reason": decision["backend"].get("reason"),
+                "inputs": {
+                    "n_parts": bwhy["n_parts"],
+                    "v_state_bytes": v_w,
+                    "he_state_bytes": he_w,
+                    "replicated_bias": cfg.replicated_bias,
+                },
+                "candidates": {
+                    "replicated": {
+                        "eligible": True,
+                        "predicted_sync_bytes": bwhy[
+                            "full_replication_sync_bytes"
+                        ],
+                        "bias_adjusted_bytes": (
+                            cfg.replicated_bias
+                            * bwhy["full_replication_sync_bytes"]
+                        ),
+                    },
+                    "sharded": {
+                        "eligible": True,
+                        "predicted_sync_bytes": bwhy["sharded_sync_bytes"],
+                    },
+                },
+            }
+
+        # -- partition: projected sync volume per strategy -------------
+        if plan is None:
+            axes["partition"] = {
+                "winner": resolved.partition_strategy,
+                "reason": "local execution partitions nothing",
+                "inputs": {},
+                "candidates": {},
+            }
+        else:
+            part_why = decision.get("partition", {})
+            costs = part_why.get("sync_bytes_by_strategy")
+            if costs is None:
+                # pinned strategy / caller-supplied plan: the sweep was
+                # skipped — report the one plan actually in play.
+                costs = {plan.name: float(plan.stats.sync_bytes_per_dim)}
+            axes["partition"] = {
+                "winner": resolved.partition_strategy,
+                "reason": part_why.get("reason"),
+                "inputs": {"n_parts": plan.n_parts},
+                "candidates": {
+                    nm: {
+                        "eligible": True,
+                        "predicted_sync_bytes_per_dim": float(c),
+                    }
+                    for nm, c in costs.items()
+                },
+            }
+
+        # -- delivery: reference vs fused HBM-traffic model ------------
+        # Run the cost model even when the axis was pinned or gated, so
+        # the non-winning candidate's predicted cost is always visible.
+        gate = _non_monoid_reason(spec)
+        _, dwhy = select_delivery(spec, hg0)
+        width = dwhy.get(
+            "message_width_bytes", message_width_bytes(spec.initial_msg)
+        )
+        nnz = dwhy.get("nnz", int(hg0.nnz))
+        ref_bytes = reference_traffic(
+            nnz, hg0.n_hyperedges, width
+        ) + reference_traffic(nnz, hg0.n_vertices, width)
+        fused_cand: dict[str, Any] = {
+            "eligible": gate is None and nnz > 0,
+            "gate": gate,
+        }
+        for k in (
+            "class_work_slots", "class_weighted_work",
+            "single_ell_weighted_work", "skew_gain", "work_budget",
+            "residual", "class_plans",
+        ):
+            if k in dwhy:
+                fused_cand[k] = dwhy[k]
+        if "class_work_slots" in dwhy:
+            # Predicted fused HBM bytes from the class plan's work
+            # slots — the same (width + id) per slot + output model
+            # obs.calibrate prices a BUILT layout with.
+            fused_cand["predicted_hbm_bytes"] = (
+                dwhy["class_work_slots"] * (width + 4.0)
+                + (hg0.n_vertices + hg0.n_hyperedges) * width
+            )
+        axes["delivery"] = {
+            "winner": resolved.delivery,
+            "reason": decision["delivery"].get("reason"),
+            "inputs": {
+                "nnz": nnz,
+                "message_width_bytes": width,
+                "width_budget": FUSED_MAX_WIDTH_BYTES,
+                "min_nnz": FUSED_MIN_NNZ,
+                "lowering": dwhy.get("lowering"),
+            },
+            "candidates": {
+                "xla": {
+                    "eligible": True,
+                    "predicted_hbm_bytes": ref_bytes,
+                },
+                "pallas_fused": fused_cand,
+            },
+        }
+
+        return {"config": resolved, "decision": decision, "axes": axes}
+
+    def _explain_analytics(self, spec: "AnalyticsSpec", **overrides) -> dict:
+        """``explain`` for the batch axes: intersect kernel,
+        (dual) representation, backend, census mode."""
+        from repro.motifs import (
+            overlap_pairs_with_counts,
+            select_intersect_kernel,
+        )
+
+        cfg = (
+            dataclasses.replace(self.config, **overrides)
+            if overrides
+            else self.config
+        )
+        pairs, _ = overlap_pairs_with_counts(spec.hg)
+        n_pairs = len(pairs)
+        resolved, mode, decision = self._resolve_analytics(
+            spec, cfg, n_pairs
+        )
+        _, kwhy = select_intersect_kernel(spec.hg)
+        axes: dict[str, Any] = {
+            "kernel": {
+                "winner": resolved.intersect_kernel,
+                "reason": decision["kernel"].get("reason"),
+                "inputs": {
+                    "n_hyperedges": int(spec.hg.n_hyperedges),
+                    "n_vertices": int(spec.hg.n_vertices),
+                },
+                "candidates": {
+                    "bitset": {
+                        "eligible": (
+                            kwhy["bitset_index_bytes"]
+                            <= kwhy["bitset_budget_bytes"]
+                        ),
+                        "predicted_ops_per_pair": kwhy[
+                            "bitset_words_per_pair"
+                        ],
+                        "index_bytes": kwhy["bitset_index_bytes"],
+                    },
+                    "merge": {
+                        "eligible": True,
+                        "predicted_ops_per_pair": kwhy[
+                            "merge_ops_per_pair"
+                        ],
+                    },
+                },
+            },
+            "representation": {
+                "winner": resolved.representation,
+                "reason": decision["representation"].get("reason"),
+                "inputs": {"n_overlap_pairs": n_pairs},
+                "candidates": {
+                    "bipartite": {
+                        "eligible": True,
+                        "predicted_cost_edges": int(spec.hg.nnz),
+                    },
+                    "clique": {
+                        "eligible": True,
+                        "predicted_cost_edges": 2 * n_pairs,
+                        "edge_budget": float(
+                            cfg.clique_edge_budget * max(spec.hg.nnz, 1)
+                        ),
+                    },
+                },
+            },
+            "backend": {
+                "winner": resolved.backend,
+                "reason": decision["backend"].get("reason"),
+                "inputs": {"mesh": self.mesh is not None},
+                "candidates": {
+                    "local": {"eligible": True},
+                    "sharded": {"eligible": self.mesh is not None},
+                },
+            },
+        }
+        if mode is not None:
+            axes["mode"] = {
+                "winner": mode,
+                "reason": decision.get("mode", {}).get("reason"),
+                "inputs": {
+                    "n_overlap_pairs": n_pairs,
+                    "exact_pair_budget": spec.exact_pair_budget,
+                },
+                "candidates": {
+                    "exact": {
+                        "eligible": spec.hg.n_hyperedges < (1 << 21),
+                        "predicted_pairs": n_pairs,
+                    },
+                    "sample": {
+                        "eligible": True,
+                        "predicted_pairs": int(spec.n_samples),
+                    },
+                },
+            }
+        return {
+            "config": resolved,
+            "decision": decision,
+            "mode": mode,
+            "axes": axes,
+        }
+
     def run(self, spec, **overrides: Any) -> Result:
         """Execute an ``AlgorithmSpec`` at the configured design point.
 
@@ -834,11 +1154,21 @@ class Engine:
         (e.g. ``engine.run(spec, max_iters=8)``).
         """
         resolved, plan, decision = self.resolve(spec, **overrides)
+        name = getattr(spec, "name", "anonymous")
 
         if resolved.representation == "clique":
-            graph = to_graph(spec.hg0)
+            t0 = time.perf_counter()
+            with maybe_span(
+                self.tracer, "engine.run", cat="execute",
+                algorithm=name, representation="clique",
+            ):
+                graph = to_graph(spec.hg0)
+                value = spec.clique_program(graph)
+            decision = {**decision, "measured": {
+                "wall_s": time.perf_counter() - t0,
+            }}
             return Result(
-                value=spec.clique_program(graph),
+                value=value,
                 config=resolved,
                 representation="clique",
                 backend="local",
@@ -852,18 +1182,32 @@ class Engine:
                 if resolved.delivery == "pallas_fused"
                 else None
             )
-            out = fn(
-                spec.hg0,
-                max_iters=resolved.max_iters,
-                initial_msg=spec.initial_msg,
-                v_program=spec.v_program,
-                he_program=spec.he_program,
-                return_stats=resolved.collect_stats,
-                delivery=delivery,
-            )
+            t0 = time.perf_counter()
+            with maybe_span(
+                self.tracer, "engine.run", cat="execute",
+                algorithm=name, backend="local",
+                delivery=resolved.delivery,
+            ) as sp:
+                out = fn(
+                    spec.hg0,
+                    max_iters=resolved.max_iters,
+                    initial_msg=spec.initial_msg,
+                    v_program=spec.v_program,
+                    he_program=spec.he_program,
+                    return_stats=resolved.collect_stats,
+                    delivery=delivery,
+                )
+                t1 = time.perf_counter()
+                jax.block_until_ready(out)
+                t2 = time.perf_counter()
+                if sp is not None:
+                    sp.args["device_wait_s"] = t2 - t1
             stats = None
             if resolved.collect_stats:
                 out, stats = out
+            decision = {**decision, "measured": self._measured(
+                spec, resolved, t0, t1, t2, stats, delivery
+            )}
             return Result(
                 value=spec.extract(out),
                 config=resolved,
@@ -875,22 +1219,38 @@ class Engine:
 
         from repro.core.distributed import distributed_compute
 
-        out = distributed_compute(
-            spec.hg0,
-            plan,
-            self.mesh,
-            max_iters=resolved.max_iters,
-            initial_msg=spec.initial_msg,
-            v_program=spec.v_program,
-            he_program=spec.he_program,
-            axis=resolved.axis,
-            backend=resolved.backend,
-            return_stats=resolved.collect_stats,
-            delivery=resolved.delivery,
-        )
+        t0 = time.perf_counter()
+        with maybe_span(
+            self.tracer, "engine.run", cat="execute",
+            algorithm=name, backend=resolved.backend,
+            delivery=resolved.delivery, n_parts=plan.n_parts,
+        ) as sp:
+            out = distributed_compute(
+                spec.hg0,
+                plan,
+                self.mesh,
+                max_iters=resolved.max_iters,
+                initial_msg=spec.initial_msg,
+                v_program=spec.v_program,
+                he_program=spec.he_program,
+                axis=resolved.axis,
+                backend=resolved.backend,
+                return_stats=resolved.collect_stats,
+                delivery=resolved.delivery,
+            )
+            t1 = time.perf_counter()
+            jax.block_until_ready(out)
+            t2 = time.perf_counter()
+            if sp is not None:
+                sp.args["device_wait_s"] = t2 - t1
         stats = None
         if resolved.collect_stats:
             out, stats = out
+        # No measured delivery bytes here: the distributed builders own
+        # their per-shard layouts inside shard_map.
+        decision = {**decision, "measured": self._measured(
+            spec, resolved, t0, t1, t2, stats, None
+        )}
         return Result(
             value=spec.extract(out),
             config=resolved,
@@ -901,6 +1261,29 @@ class Engine:
             superstep_stats=stats,
             decision=decision,
         )
+
+    @staticmethod
+    def _measured(spec, resolved, t0, t1, t2, stats, delivery) -> dict:
+        """The measured counterpart of the predicted ``decision``: wall
+        and device time, executed supersteps (when stats were
+        collected), and actual per-class delivery bytes for a built
+        fused layout — what ``obs.calibrate`` compares against the
+        cost models' predictions."""
+        measured: dict[str, Any] = {
+            "wall_s": t2 - t0,
+            "dispatch_s": t1 - t0,
+            "device_wait_s": t2 - t1,
+            "max_iters": resolved.max_iters,
+        }
+        if stats is not None:
+            measured["supersteps"] = executed_supersteps(
+                stats, resolved.max_iters
+            )
+        if delivery is not None:
+            measured["delivery"] = delivery_traffic_pair(
+                delivery, message_width_bytes(spec.initial_msg)
+            )
+        return measured
 
     # -- compile-once serve-many --------------------------------------------
 
@@ -1017,7 +1400,18 @@ class Engine:
             self._cache_hits += 1
             return cache[key]
         self._cache_misses += 1
-        exe = build()
+        if self.tracer is None:
+            exe = build()
+        else:
+            span_args = {
+                k: v
+                for k, v in (meta or {}).items()
+                if isinstance(v, (str, int, float, bool))
+            }
+            with self.tracer.span(
+                "engine.build_executable", cat="compile", **span_args
+            ):
+                exe = build()
         if self.disk_cache is not None:
             exe = self.disk_cache.wrap(self, key, exe)
         cache[key] = exe

@@ -25,6 +25,7 @@ bitwise identical to an unpadded run while shapes stay bucket-stable.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -531,16 +532,23 @@ class CompiledAlgorithm:
         delivery = None
         delivery_sig = None
         if cfg.delivery == "pallas_fused":
-            if cfg.backend == "local":
-                delivery = layout_pair(
-                    hgp.src, hgp.dst, hgp.e_mask, nv_pad, ne_pad
-                )
-            else:
-                from repro.core.distributed import build_shard_delivery
+            from repro.obs.trace import maybe_span
 
-                delivery = build_shard_delivery(
-                    *(np.asarray(s) for s in shards), nv_pad, ne_pad
-                )
+            with maybe_span(
+                self.engine.tracer, "serve.layout_build", cat="compile",
+                algorithm=self.spec.name, nnz_pad=int(nnz_pad),
+                nv_pad=int(nv_pad), ne_pad=int(ne_pad),
+            ):
+                if cfg.backend == "local":
+                    delivery = layout_pair(
+                        hgp.src, hgp.dst, hgp.e_mask, nv_pad, ne_pad
+                    )
+                else:
+                    from repro.core.distributed import build_shard_delivery
+
+                    delivery = build_shard_delivery(
+                        *(np.asarray(s) for s in shards), nv_pad, ne_pad
+                    )
             delivery_sig = tuple(l.shape_signature() for l in delivery)
         prep = dict(
             base=base,
@@ -607,6 +615,29 @@ class CompiledAlgorithm:
             "n_parts": prep["n_parts"],
         }
 
+        # Tracing on the serve hot path is strictly opt-in: without a
+        # tracer this closure is exactly ``exe(*args)`` — no timing, no
+        # allocation (the zero-overhead contract bench_obs asserts).
+        tracer = engine.tracer
+        timing: dict = {}
+
+        def _call(exe, args):
+            if tracer is None:
+                return exe(*args)
+            t0 = time.perf_counter()
+            traces0 = engine._trace_count
+            with tracer.span(
+                "engine.execute", cat="execute", algorithm=spec.name,
+                backend=cfg.backend, delivery=cfg.delivery,
+                batch=int(b) if b is not None else 0,
+            ) as sp:
+                out = exe(*args)
+                tracer.block(sp, out)
+                sp.args["retraces"] = engine._trace_count - traces0
+            timing["wall_s"] = time.perf_counter() - t0
+            timing["device_wait_s"] = sp.args.get("device_wait_s", 0.0)
+            return out
+
         if distributed:
             exe = engine._executable_for(
                 key,
@@ -627,7 +658,7 @@ class CompiledAlgorithm:
             with engine.mesh:
                 if warm_only:
                     return {"source": _warm_executable(exe, args)}
-                v_attr, he_attr, stats, executed = exe(*args)
+                v_attr, he_attr, stats, executed = _call(exe, args)
         else:
             exe = engine._executable_for(
                 key,
@@ -644,7 +675,7 @@ class CompiledAlgorithm:
             )
             if warm_only:
                 return {"source": _warm_executable(exe, args)}
-            v_attr, he_attr, stats, executed = exe(*args)
+            v_attr, he_attr, stats, executed = _call(exe, args)
 
         # Slice padding (and batch padding) back off; extract on a
         # real-size hypergraph whose attrs may carry a leading batch dim
@@ -663,6 +694,25 @@ class CompiledAlgorithm:
             v_attr=jax.tree.map(unslice_v, v_attr),
             he_attr=jax.tree.map(unslice_he, he_attr),
         )
+        decision = self.decision
+        if tracer is not None and timing:
+            # Measured enrichment is tracer-gated here (unlike
+            # Engine.run's one-shot path) so warm serving stays
+            # allocation-free by default.
+            from repro.core.executor import message_width_bytes
+            from repro.obs.calibrate import delivery_traffic_pair
+
+            measured: dict = dict(timing)
+            if executed is not None:
+                try:
+                    measured["supersteps"] = int(np.asarray(executed))
+                except Exception:
+                    pass
+            if prep["delivery"] is not None and not distributed:
+                measured["delivery"] = delivery_traffic_pair(
+                    prep["delivery"], message_width_bytes(spec.initial_msg)
+                )
+            decision = {**self.decision, "measured": measured}
         return Result(
             value=spec.extract(out),
             config=cfg,
@@ -672,5 +722,5 @@ class CompiledAlgorithm:
             partition_stats=plan.stats if plan is not None else None,
             superstep_stats=stats,
             supersteps_executed=executed,
-            decision=self.decision,
+            decision=decision,
         )

@@ -45,11 +45,14 @@ flow through jit / scan / vmap / shard_map as ordinary operands.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.metrics import default_registry
 
 # Single-ELL planning (the legacy PR-4 packing, kept as the cost model's
 # skew baseline): grow k (powers of two) until the COO remainder holds at
@@ -450,6 +453,7 @@ def build_delivery_layout(
     what this shard needs) so per-shard layouts stack into one
     shard_map operand.
     """
+    t_build0 = time.perf_counter()
     src = np.asarray(src, np.int64)
     dst = np.asarray(dst, np.int64)
     nnz = len(src)
@@ -577,7 +581,7 @@ def build_delivery_layout(
         c_block_e.append(be)
         c_max_blocks.append(mb)
 
-    return DeliveryLayout(
+    layout = DeliveryLayout(
         class_ell=tuple(jnp.asarray(t) for t in class_ell),
         class_src=tuple(jnp.asarray(a) for a in class_src_a),
         class_dst=tuple(jnp.asarray(a) for a in class_dst_a),
@@ -595,6 +599,14 @@ def build_delivery_layout(
         class_block_e=tuple(c_block_e),
         class_max_blocks=tuple(c_max_blocks),
     )
+    reg = default_registry()
+    reg.counter("delivery.layouts_built").inc()
+    reg.counter("delivery.ell_slots").inc(layout.ell_slots)
+    reg.counter("delivery.residual_lanes").inc(layout.rem_len)
+    reg.histogram("delivery.build_s").record(
+        time.perf_counter() - t_build0
+    )
+    return layout
 
 
 def layout_pair(

@@ -67,6 +67,15 @@ def _parse(argv=None):
     ap.add_argument("--batch", type=int, default=None,
                     help="serve N random query vertices through one "
                          "compiled executable (see --sources)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the full auto-axis decision tree "
+                         "(per-candidate predicted costs) before running")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record engine trace spans; export Chrome-trace "
+                         "JSON here (loadable in Perfetto)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON ('-' for stdout)")
     ap.add_argument("--cache-stats", action="store_true",
                     help="print the executable-cache statistics "
                          "(entries, hits/misses, evictions, per-entry "
@@ -107,6 +116,38 @@ def _print_cache_stats(engine) -> None:
         print(f"  disk: {s['disk']}")
 
 
+def _print_explain(ex: dict) -> None:
+    print("explain:")
+    for axis, info in ex["axes"].items():
+        print(f"  {axis}: winner={info.get('winner')} "
+              f"({info.get('reason')})")
+        for cand, costs in info.get("candidates", {}).items():
+            mark = "*" if cand == info.get("winner") else " "
+            kv = " ".join(
+                f"{k}={v}" for k, v in costs.items()
+                if k not in ("class_plans",) and not isinstance(v, dict)
+            )
+            print(f"   {mark} {cand}: {kv}")
+
+
+def _emit_obs(engine, args) -> None:
+    if args.trace and engine.tracer is not None:
+        engine.tracer.export(args.trace)
+        print(f"trace: {len(engine.tracer.spans())} spans "
+              f"({engine.tracer.dropped} dropped) -> {args.trace}")
+    if args.metrics_json:
+        import json
+
+        payload = json.dumps(engine.metrics.snapshot(), indent=2,
+                             sort_keys=True, default=str)
+        if args.metrics_json == "-":
+            print(payload)
+        else:
+            with open(args.metrics_json, "w") as f:
+                f.write(payload + "\n")
+            print(f"metrics -> {args.metrics_json}")
+
+
 def main(argv=None) -> int:
     args = _parse(argv)
     if args.devices > 1:
@@ -127,8 +168,14 @@ def main(argv=None) -> int:
           f"nnz={hg.nnz}")
 
     mesh = make_host_mesh(args.devices) if args.devices > 1 else None
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     engine = Engine(
         mesh=mesh,
+        tracer=tracer,
         representation=args.representation,
         backend=args.backend,
         partition_strategy=args.partition,
@@ -137,9 +184,12 @@ def main(argv=None) -> int:
     )
 
     if args.algorithm == "motifs":
-        res = engine.analyze(AnalyticsSpec(
+        aspec = AnalyticsSpec(
             hg, mode=args.mode, n_samples=args.samples, seed=args.seed,
-        ))
+        )
+        if args.explain:
+            _print_explain(engine.explain(aspec))
+        res = engine.analyze(aspec)
         print(f"design point: representation={res.representation} "
               f"kernel={res.kernel} backend={res.backend} "
               f"mode={res.mode}")
@@ -165,9 +215,12 @@ def main(argv=None) -> int:
                     line += (f"  [{c.ci_low[m]:.0f}, {c.ci_high[m]:.0f}] "
                              f"@{c.confidence:.0%}")
                 print(line)
+        _emit_obs(engine, args)
         return 0
 
     spec = build_spec(args.algorithm, hg, args.iters)
+    if args.explain:
+        _print_explain(engine.explain(spec))
 
     if args.sources is not None or args.batch is not None:
         # compile-once serve-many: one executable, B queries.
@@ -204,6 +257,7 @@ def main(argv=None) -> int:
         first = np.asarray(leaves[0])
         for i, q in enumerate(queries[:4]):
             print(f"  query {int(q):4d}: {first[i].ravel()[:5]}")
+        _emit_obs(engine, args)
         return 0
 
     res = engine.run(spec)
@@ -211,8 +265,17 @@ def main(argv=None) -> int:
     print(f"design point: representation={res.representation} "
           f"backend={res.backend} partition={res.partition}")
     for axis, why in res.decision.items():
+        if axis == "measured":
+            continue
         reason = why.get("reason") if isinstance(why, dict) else why
         print(f"  {axis}: {reason}")
+    m = res.decision.get("measured")
+    if m:
+        line = (f"  measured: wall={m['wall_s'] * 1e3:.1f}ms "
+                f"device_wait={m['device_wait_s'] * 1e3:.2f}ms")
+        if m.get("supersteps") is not None:
+            line += f" supersteps={m['supersteps']}/{m['max_iters']}"
+        print(line)
     if res.partition_stats is not None:
         s = res.partition_stats
         print(f"  plan: vrep={s.vertex_replication:.2f} "
@@ -227,6 +290,7 @@ def main(argv=None) -> int:
           f"first = {np.asarray(leaves[0]).ravel()[:6]}")
     if args.cache_stats:
         _print_cache_stats(engine)
+    _emit_obs(engine, args)
     return 0
 
 

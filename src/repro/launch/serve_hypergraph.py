@@ -54,6 +54,17 @@ def _parse(argv=None):
                     help="coalescing batch bucket per registered path")
     ap.add_argument("--max-delay-ms", type=float, default=5.0,
                     help="max queue wait before a partial flush")
+    ap.add_argument("--adaptive-delay", action="store_true",
+                    help="let the front-end adapt the flush deadline "
+                         "from the observed wait/execute split "
+                         "(bounded EWMA controller; --max-delay-ms "
+                         "becomes the upper clamp)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record engine + serve trace spans; export "
+                         "Chrome-trace JSON here (loadable in Perfetto)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the unified metrics-registry snapshot "
+                         "as JSON ('-' for stdout)")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent executable cache dir "
                          "(default $REPRO_CACHE_DIR or .repro_cache/)")
@@ -92,8 +103,14 @@ def main(argv=None) -> int:
           f"nnz={hg.nnz}")
 
     mesh = make_host_mesh(args.devices) if args.devices > 1 else None
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     engine = Engine(
         mesh=mesh, disk_cache=DiskExecutableCache(args.cache_dir),
+        tracer=tracer,
     )
     specs = {
         "sssp": alg.shortest_paths_spec(hg, source=0,
@@ -115,6 +132,7 @@ def main(argv=None) -> int:
     fe = Frontend(
         engine, max_batch=args.max_batch,
         max_delay_ms=args.max_delay_ms, log_every_s=args.log_every_s,
+        adaptive_delay=args.adaptive_delay,
     )
     for key, spec in specs.items():
         fe.register(key, spec)
@@ -151,6 +169,11 @@ def main(argv=None) -> int:
         print(f"  disk cache:   entries={d['entries']} "
               f"hits={d['disk_hits']} stores={d['disk_stores']} "
               f"({d['dir']})")
+    if st.get("adaptive_delay") is not None:
+        a = st["adaptive_delay"]
+        print(f"  adaptive delay: {a['delay_s'] * 1e3:.2f}ms "
+              f"(exec ewma {a['exec_ewma_s'] * 1e3:.2f}ms, "
+              f"{a['observations']} obs)")
 
     if args.verify:
         idx = rng.choice(len(results), size=min(args.verify, len(results)),
@@ -170,6 +193,19 @@ def main(argv=None) -> int:
 
     if args.json:
         print(json.dumps(st, indent=2, sort_keys=True, default=str))
+    if args.trace and tracer is not None:
+        tracer.export(args.trace)
+        print(f"trace: {len(tracer.spans())} spans "
+              f"({tracer.dropped} dropped) -> {args.trace}")
+    if args.metrics_json:
+        payload = json.dumps(engine.metrics.snapshot(), indent=2,
+                             sort_keys=True, default=str)
+        if args.metrics_json == "-":
+            print(payload)
+        else:
+            with open(args.metrics_json, "w") as f:
+                f.write(payload + "\n")
+            print(f"metrics -> {args.metrics_json}")
     return 0
 
 

@@ -1,0 +1,59 @@
+"""Engine-wide observability: trace spans, explain/calibrate, metrics.
+
+Three cross-cutting pieces, wired through core and serve:
+
+* ``trace``     — clock-injected, ring-buffered ``Tracer`` recording
+  phase spans (layout build, compile, disk load, execute, serve flush)
+  with device time from ``block_until_ready`` deltas; exports
+  Chrome-trace JSON loadable in Perfetto.  Attach with
+  ``Engine(tracer=Tracer())``; zero overhead when absent.
+* ``metrics``   — the unified ``MetricsRegistry`` (counters, gauges,
+  log-spaced histograms, snapshot providers) every counting subsystem
+  registers into; one ``snapshot()``, surfaced via ``--metrics-json``
+  on the launchers and merged into ``Frontend.stats()``.
+  ``LatencyHistogram`` lives here (``serve.metrics`` re-exports it).
+* ``calibrate`` — predicted-vs-measured residuals per `auto` axis:
+  ``Engine.explain(spec)`` reports every candidate's predicted cost
+  without executing; ``Engine.run`` enriches ``Result.decision`` with
+  measured counterparts; this module compares the two (and
+  ``bench_delivery``'s regime table) in log2 space.
+"""
+from repro.obs.calibrate import (
+    decision_residuals,
+    delivery_calibration,
+    delivery_traffic_pair,
+    executed_supersteps,
+    fused_traffic,
+    reference_traffic,
+    residual_log2,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    LatencyHistogram,
+    MetricsRegistry,
+    default_registry,
+    reset_default_registry,
+    weak_provider,
+)
+from repro.obs.trace import Span, Tracer, maybe_span
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "LatencyHistogram",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "decision_residuals",
+    "default_registry",
+    "delivery_calibration",
+    "delivery_traffic_pair",
+    "executed_supersteps",
+    "fused_traffic",
+    "maybe_span",
+    "reference_traffic",
+    "reset_default_registry",
+    "residual_log2",
+    "weak_provider",
+]

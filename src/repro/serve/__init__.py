@@ -33,9 +33,10 @@ times -> ``BENCH_serve_tier.json``).
 from repro.serve.cache import DiskExecutableCache, stable_digest, warm
 from repro.serve.frontend import Frontend, ServedResult
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
-from repro.serve.queue import CoalescingBatcher, Flush, Request
+from repro.serve.queue import AdaptiveDelay, CoalescingBatcher, Flush, Request
 
 __all__ = [
+    "AdaptiveDelay",
     "CoalescingBatcher",
     "DiskExecutableCache",
     "Flush",

@@ -37,11 +37,15 @@ import pickle
 import tempfile
 import time
 import types
+import weakref
 from functools import partial
 from pathlib import Path
 from typing import Any, Iterable
 
 import numpy as np
+
+from repro.obs.metrics import default_registry, weak_provider
+from repro.obs.trace import maybe_span
 
 _SCHEMA = 1
 _FORMAT_EXECUTABLE = "xla-executable"
@@ -184,6 +188,9 @@ class DiskExecutableCache:
             "disk_errors": 0,
             "warm_records": 0,
         }
+        default_registry().register_provider(
+            "serve.disk_cache", weak_provider(self.stats)
+        )
 
     # -- paths -------------------------------------------------------------
 
@@ -274,7 +281,7 @@ class DiskExecutableCache:
         """Engine seam: wrap a freshly-built jitted executable so its
         first use resolves disk-load vs AOT-compile (see
         ``Engine._executable_for``)."""
-        return _DiskBackedExecutable(self, key, jitted)
+        return _DiskBackedExecutable(self, key, jitted, engine=engine)
 
     def stats(self) -> dict:
         entries = 0
@@ -292,30 +299,46 @@ class _DiskBackedExecutable:
     callable.  ``source`` records which path won, for observability.
     """
 
-    __slots__ = ("cache", "key", "jitted", "compiled", "source")
+    __slots__ = ("cache", "key", "jitted", "compiled", "source",
+                 "_engine_ref")
 
-    def __init__(self, cache: DiskExecutableCache, key, jitted):
+    def __init__(self, cache: DiskExecutableCache, key, jitted, engine=None):
         self.cache = cache
         self.key = key
         self.jitted = jitted
         self.compiled = None
         self.source = None
+        # weak: the Engine's LRU owns this object, never the reverse
+        self._engine_ref = weakref.ref(engine) if engine is not None else None
+
+    def _tracer(self):
+        engine = self._engine_ref() if self._engine_ref is not None else None
+        return getattr(engine, "tracer", None)
 
     def _materialize(self, args: tuple) -> None:
         if self.compiled is not None:
             return
-        loaded = self.cache.load(self.key)
+        tracer = self._tracer()
+        with maybe_span(tracer, "serve.disk_load", cat="compile") as sp:
+            loaded = self.cache.load(self.key)
         if loaded is not None:
             self.compiled, self.source = loaded, "disk"
+            if sp is not None:
+                sp.args["source"] = "disk"
             return
-        try:
-            compiled = self.jitted.lower(*args).compile()
-        except Exception:
-            # Can't AOT-lower these args (exotic pytrees, platform
-            # quirks): serve through plain jit, skip persistence.
-            self.compiled, self.source = self.jitted, "jit"
-            return
-        self.compiled, self.source = compiled, "aot"
+        with maybe_span(tracer, "serve.aot_compile", cat="compile") as sp:
+            try:
+                compiled = self.jitted.lower(*args).compile()
+            except Exception:
+                # Can't AOT-lower these args (exotic pytrees, platform
+                # quirks): serve through plain jit, skip persistence.
+                self.compiled, self.source = self.jitted, "jit"
+                if sp is not None:
+                    sp.args["source"] = "jit"
+                return
+            self.compiled, self.source = compiled, "aot"
+            if sp is not None:
+                sp.args["source"] = "aot"
         self.cache.store(self.key, compiled)
 
     def warm(self, args: tuple) -> str:

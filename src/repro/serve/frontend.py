@@ -33,8 +33,9 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs.trace import maybe_span
 from repro.serve.metrics import ServeMetrics
-from repro.serve.queue import CoalescingBatcher, Flush
+from repro.serve.queue import AdaptiveDelay, CoalescingBatcher, Flush
 
 DEFAULT_MAX_BATCH = 32
 DEFAULT_MAX_DELAY_MS = 5.0
@@ -96,12 +97,26 @@ class Frontend:
         max_delay_ms: float = DEFAULT_MAX_DELAY_MS,
         log_every_s: float | None = None,
         clock=time.monotonic,
+        adaptive_delay: bool = False,
+        min_delay_ms: float = 0.5,
     ):
         self.engine = engine
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_ms) / 1e3
         self.clock = clock
         self.metrics = ServeMetrics(log_every_s=log_every_s)
+        # Off by default: max_delay_ms stays a fixed deadline.  Opted
+        # in, it becomes the UPPER bound of an AdaptiveDelay controller
+        # fed by the observed flush reason / occupancy / execute time.
+        self._adaptive = (
+            AdaptiveDelay(
+                self.max_delay_s,
+                lo_s=float(min_delay_ms) / 1e3,
+                hi_s=max(self.max_delay_s, float(min_delay_ms) / 1e3),
+            )
+            if adaptive_delay
+            else None
+        )
         self._paths: dict[Any, _Path] = {}
         self._batcher = CoalescingBatcher(
             capacity=lambda group: self._paths[group[0]].max_batch
@@ -165,9 +180,12 @@ class Frontend:
             raise KeyError(
                 f"unknown spec_key {spec_key!r}; register() it first"
             )
-        deadline_s = (
-            self.max_delay_s if deadline_ms is None else deadline_ms / 1e3
-        )
+        if deadline_ms is not None:
+            deadline_s = deadline_ms / 1e3
+        elif self._adaptive is not None:
+            deadline_s = self._adaptive.delay_s
+        else:
+            deadline_s = self.max_delay_s
         fut: Future = Future()
         with self._cond:
             if self._closed:
@@ -267,11 +285,21 @@ class Frontend:
         waits = [dispatch - r.arrival for r in reqs]
         b = len(reqs)
         bucket = bucket_dim(b, floor=BATCH_FLOOR)
+        tracer = getattr(self.engine, "tracer", None)
         try:
-            queries = _stack([r.query for r in reqs])
-            res = path.compiled.run_batch(queries, hg=flush.hg)
-            value = res.value
-            _block(value)
+            with maybe_span(
+                tracer, "serve.flush", cat="serve",
+                group=str(flush.group[0]), reason=flush.reason, batch=b,
+                bucket=bucket,
+            ) as sp:
+                queries = _stack([r.query for r in reqs])
+                res = path.compiled.run_batch(queries, hg=flush.hg)
+                value = res.value
+                if sp is not None:
+                    tracer.block(sp, value)
+                    sp.args["max_wait_s"] = max(waits, default=0.0)
+                else:
+                    _block(value)
         except Exception as err:  # noqa: BLE001 - fanned out to futures
             self.metrics.note_flush(
                 flush.group[0], flush.reason, b, bucket, waits,
@@ -287,6 +315,14 @@ class Frontend:
         self.metrics.note_flush(
             flush.group[0], flush.reason, b, bucket, waits, execute_s,
         )
+        if self._adaptive is not None:
+            # Error flushes (above) don't feed the controller: their
+            # execute time measures the failure, not the batch.
+            self._adaptive.observe(
+                execute_s=execute_s,
+                occupancy=b / max(path.max_batch, 1),
+                reason=flush.reason,
+            )
         rows = _unstack(value, b)
         for i, r in enumerate(reqs):
             if r.future is None:
@@ -304,9 +340,19 @@ class Frontend:
 
     # -- observability -----------------------------------------------------
 
+    @property
+    def current_delay_ms(self) -> float:
+        """The flush deadline new submits get (adaptive or fixed)."""
+        delay_s = (
+            self._adaptive.delay_s if self._adaptive is not None
+            else self.max_delay_s
+        )
+        return delay_s * 1e3
+
     def stats(self) -> dict:
         """One snapshot across all three layers: front-end latency /
-        occupancy, the Engine's executable cache, and the disk store."""
+        occupancy, the Engine's executable cache, the disk store — plus
+        the unified metrics registry (every provider in one view)."""
         snap = self.metrics.snapshot()
         engine_stats = None
         if hasattr(self.engine, "cache_stats"):
@@ -314,6 +360,10 @@ class Frontend:
         snap["engine_cache"] = engine_stats
         disk = getattr(self.engine, "disk_cache", None)
         snap["disk_cache"] = disk.stats() if disk is not None else None
+        snap["adaptive_delay"] = (
+            self._adaptive.snapshot() if self._adaptive is not None else None
+        )
+        snap["registry"] = self.metrics.registry.snapshot()
         return snap
 
 

@@ -15,68 +15,34 @@ low occupancy = paying padded execution for empty slots), flush-reason
 counters, and the engine/disk cache counters merged into one
 ``snapshot()``.  ``maybe_log`` emits a one-line summary at a bounded
 rate for long-running serve loops.
+
+``LatencyHistogram`` moved to ``repro.obs.metrics`` (one histogram
+implementation for the serving tier and the unified registry); it is
+re-exported here for compatibility.  Every ``ServeMetrics`` also
+registers itself as a ``serve.frontend`` snapshot provider on the
+default ``MetricsRegistry``.
 """
 from __future__ import annotations
 
-import bisect
 import logging
-import math
 import threading
 from collections import Counter
 from typing import Any
 
+from repro.obs.metrics import (  # noqa: F401 - _BOUNDS re-exported for compat
+    _BOUNDS,
+    LatencyHistogram,
+    default_registry,
+    weak_provider,
+)
+
 log = logging.getLogger("repro.serve")
-
-# Histogram bin upper bounds: 1us .. ~4600s, quarter-decade spacing —
-# ~2x resolution per bin, 40 bins, fixed memory.
-_BOUNDS = [1e-6 * (10 ** (i / 4)) for i in range(40)]
-
-
-class LatencyHistogram:
-    """Fixed-bin log histogram over seconds; quantiles report the upper
-    bound of the covering bin (<= ~78% relative overestimate at
-    quarter-decade spacing — plenty for p50-vs-p999 shape)."""
-
-    def __init__(self):
-        self._counts = [0] * (len(_BOUNDS) + 1)
-        self.count = 0
-        self.total = 0.0
-        self.max = 0.0
-
-    def record(self, seconds: float) -> None:
-        seconds = max(float(seconds), 0.0)
-        self._counts[bisect.bisect_left(_BOUNDS, seconds)] += 1
-        self.count += 1
-        self.total += seconds
-        self.max = max(self.max, seconds)
-
-    def quantile(self, q: float) -> float:
-        """Upper bound of the bin holding the q-quantile (0 when empty)."""
-        if self.count == 0:
-            return 0.0
-        target = math.ceil(q * self.count)
-        seen = 0
-        for i, c in enumerate(self._counts):
-            seen += c
-            if seen >= target:
-                return _BOUNDS[i] if i < len(_BOUNDS) else self.max
-        return self.max
-
-    def snapshot(self) -> dict:
-        return {
-            "count": self.count,
-            "mean_s": self.total / self.count if self.count else 0.0,
-            "p50_s": self.quantile(0.50),
-            "p99_s": self.quantile(0.99),
-            "p999_s": self.quantile(0.999),
-            "max_s": self.max,
-        }
 
 
 class ServeMetrics:
     """The front-end's counters; thread-safe (worker + submitters)."""
 
-    def __init__(self, log_every_s: float | None = None):
+    def __init__(self, log_every_s: float | None = None, registry=None):
         self._lock = threading.Lock()
         self.wait = LatencyHistogram()
         self.execute = LatencyHistogram()
@@ -89,6 +55,12 @@ class ServeMetrics:
         self.errors = 0
         self.log_every_s = log_every_s
         self._last_log = None
+        self.registry = registry if registry is not None else (
+            default_registry()
+        )
+        self._provider_name = self.registry.register_provider(
+            "serve.frontend", weak_provider(self.snapshot)
+        )
 
     def note_submit(self, n: int = 1) -> None:
         with self._lock:

@@ -177,3 +177,85 @@ class CoalescingBatcher:
         cap = self.capacity(key)
         batch, grp.pending = grp.pending[:cap], grp.pending[cap:]
         return Flush(group=key, requests=batch, reason=reason, hg=grp.hg)
+
+
+class AdaptiveDelay:
+    """Bounded EWMA controller for the coalescing flush deadline.
+
+    The fixed ``max_delay_ms`` is a guess; the right deadline depends
+    on traffic, and the wait/execute split ``ServeMetrics`` already
+    records says which way it's wrong.  Policy (one signal per flush):
+
+    * reason ``"full"`` — buckets fill before any deadline: waiting
+      buys nothing, pull the deadline toward ``lo_s``;
+    * reason ``"deadline"`` at LOW occupancy — flushes go out mostly
+      empty: waiting longer could coalesce more, pull toward
+      ``exec_ratio x EWMA(execute)`` (a request should never wait much
+      longer than the batch execute its waiting saves);
+    * otherwise (deadline flush, decently full) — hold.
+
+    Every update is one gain-bounded EWMA step clamped to
+    ``[lo_s, hi_s]``, so the delay is ALWAYS in bounds and converges
+    geometrically under a steady signal — both property-tested.  Pure
+    and clock-free (callers pass observed durations), like the batcher;
+    OFF by default (``Frontend(adaptive_delay=True)`` opts in).
+    """
+
+    def __init__(
+        self,
+        delay_s: float,
+        *,
+        lo_s: float = 5e-4,
+        hi_s: float = 5e-2,
+        gain: float = 0.3,
+        exec_alpha: float = 0.3,
+        exec_ratio: float = 1.0,
+        low_occupancy: float = 0.5,
+    ):
+        if not 0.0 < lo_s <= hi_s:
+            raise ValueError(f"need 0 < lo_s <= hi_s, got {lo_s}, {hi_s}")
+        if not 0.0 < gain <= 1.0:
+            raise ValueError(f"gain must be in (0, 1], got {gain}")
+        self.lo_s, self.hi_s = float(lo_s), float(hi_s)
+        self.gain = float(gain)
+        self.exec_alpha = float(exec_alpha)
+        self.exec_ratio = float(exec_ratio)
+        self.low_occupancy = float(low_occupancy)
+        self._exec_ewma: float | None = None
+        self.delay_s = self._clamp(float(delay_s))
+        self.observations = 0
+
+    def _clamp(self, x: float) -> float:
+        return min(max(x, self.lo_s), self.hi_s)
+
+    def observe(
+        self, *, execute_s: float, occupancy: float, reason: str
+    ) -> float:
+        """Fold in one flush; returns the updated delay (seconds)."""
+        execute_s = max(float(execute_s), 0.0)
+        self._exec_ewma = (
+            execute_s
+            if self._exec_ewma is None
+            else (1.0 - self.exec_alpha) * self._exec_ewma
+            + self.exec_alpha * execute_s
+        )
+        if reason == "full":
+            target = self.lo_s
+        elif occupancy <= self.low_occupancy:
+            target = self._clamp(self.exec_ratio * self._exec_ewma)
+        else:
+            target = self.delay_s
+        self.delay_s = self._clamp(
+            self.delay_s + self.gain * (target - self.delay_s)
+        )
+        self.observations += 1
+        return self.delay_s
+
+    def snapshot(self) -> dict:
+        return {
+            "delay_s": self.delay_s,
+            "exec_ewma_s": self._exec_ewma,
+            "observations": self.observations,
+            "lo_s": self.lo_s,
+            "hi_s": self.hi_s,
+        }

@@ -519,3 +519,148 @@ def test_frontend_sharded_backend_subprocess():
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "FRONTEND_SHARDED_AGREES" in proc.stdout
+
+
+# --------------------------------------------------------------------------
+# adaptive flush deadline (the bounded EWMA controller; off by default)
+# --------------------------------------------------------------------------
+
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(0.0, 0.2),                      # execute_s
+            st.floats(0.0, 1.0),                      # occupancy
+            st.sampled_from(["full", "deadline", "drain"]),
+        ),
+        min_size=1, max_size=60,
+    ),
+    st.floats(1e-5, 1.0),                             # initial delay
+)
+@settings(max_examples=80, deadline=None)
+def test_adaptive_delay_always_in_bounds(stream, d0):
+    from repro.serve import AdaptiveDelay
+
+    ad = AdaptiveDelay(d0, lo_s=1e-3, hi_s=2e-2)
+    for execute_s, occupancy, reason in stream:
+        d = ad.observe(
+            execute_s=execute_s, occupancy=occupancy, reason=reason
+        )
+        assert 1e-3 <= d <= 2e-2
+        assert d == ad.delay_s
+    assert ad.observations == len(stream)
+    snap = ad.snapshot()
+    assert snap["lo_s"] == 1e-3 and snap["hi_s"] == 2e-2
+
+
+def test_adaptive_delay_converges_down_under_full_flushes():
+    from repro.serve import AdaptiveDelay
+
+    ad = AdaptiveDelay(0.02, lo_s=1e-3, hi_s=2e-2)
+    for _ in range(50):
+        ad.observe(execute_s=0.005, occupancy=1.0, reason="full")
+    assert ad.delay_s <= 1.2e-3  # geometrically onto the floor
+
+
+def test_adaptive_delay_grows_toward_execute_cost_when_starved():
+    from repro.serve import AdaptiveDelay
+
+    ad = AdaptiveDelay(0.002, lo_s=1e-3, hi_s=5e-2)
+    # mostly-empty deadline flushes with a 30ms execute: waiting up to
+    # one execute is worth it, so the delay climbs toward 30ms.
+    for _ in range(60):
+        ad.observe(execute_s=0.03, occupancy=0.1, reason="deadline")
+    assert ad.delay_s == pytest.approx(0.03, rel=0.1)
+    # well-filled deadline flushes hold rather than drift
+    held = ad.delay_s
+    for _ in range(10):
+        ad.observe(execute_s=0.03, occupancy=0.9, reason="deadline")
+    assert ad.delay_s == pytest.approx(held, rel=1e-6)
+
+
+def test_adaptive_delay_validates_parameters():
+    from repro.serve import AdaptiveDelay
+
+    with pytest.raises(ValueError, match="lo_s"):
+        AdaptiveDelay(0.01, lo_s=0.0)
+    with pytest.raises(ValueError, match="lo_s"):
+        AdaptiveDelay(0.01, lo_s=0.1, hi_s=0.01)
+    with pytest.raises(ValueError, match="gain"):
+        AdaptiveDelay(0.01, gain=0.0)
+
+
+def test_frontend_adaptive_delay_shrinks_on_full_traffic():
+    clock = FakeClock()
+    fe = Frontend(
+        Engine(), max_batch=4, max_delay_ms=20.0, clock=clock,
+        adaptive_delay=True, min_delay_ms=1.0,
+    )
+    fe.register("sssp", FakeCompiled(1000))
+    assert fe.current_delay_ms == pytest.approx(20.0)
+    for _ in range(20):  # every flush full: waiting buys nothing
+        for q in range(4):
+            fe.submit("sssp", query=q)
+        fe.pump(drain=True)
+    assert fe.current_delay_ms < 2.0
+    snap = fe.stats()["adaptive_delay"]
+    assert snap is not None and snap["observations"] == 20
+    # error flushes must not feed the controller
+    class Broken:
+        def run_batch(self, queries, hg=None):
+            raise RuntimeError("boom")
+
+    fe.register("bad", Broken())
+    fe.submit("bad", query=1)
+    fe.pump(drain=True)
+    assert fe.stats()["adaptive_delay"]["observations"] == 20
+
+
+def test_frontend_adaptive_delay_off_by_default():
+    fe = Frontend(Engine(), max_batch=4, max_delay_ms=7.0,
+                  clock=FakeClock())
+    assert fe.stats()["adaptive_delay"] is None
+    assert fe.current_delay_ms == pytest.approx(7.0)
+
+
+# --------------------------------------------------------------------------
+# warmup-record fallback: platforms where serialize_executable fails
+# --------------------------------------------------------------------------
+
+def test_disk_cache_warmup_record_fallback(tmp_path, monkeypatch):
+    """When ``serialize_executable.serialize`` raises (platforms that
+    cannot round-trip executables), ``store`` degrades to a warmup
+    record, boot still works, and a second replica re-traces instead of
+    crashing on the record."""
+    from jax.experimental import serialize_executable as se
+    from repro.algorithms import shortest_paths_spec
+
+    def boom(compiled):
+        raise RuntimeError("platform cannot serialize executables")
+
+    monkeypatch.setattr(se, "serialize", boom)
+    hg = powerlaw_hypergraph(61, 37, mean_cardinality=4, seed=1)
+    spec = shortest_paths_spec(hg, 0, 6)
+
+    eng1 = Engine(disk_cache=DiskExecutableCache(tmp_path))
+    report = warm(eng1, [spec], batch_sizes=(4,), queries=[0])
+    s1 = eng1.disk_cache.stats()
+    assert report["from_disk"] == 0
+    assert s1["disk_stores"] == 0          # nothing fully serialized
+    assert s1["disk_errors"] >= 1          # every store degraded
+    assert s1["entries"] >= 1              # ... to on-disk warmup records
+    res1 = eng1.compile(spec).run_batch(np.asarray([0, 1], np.int32))
+    assert res1.value is not None
+
+    # second replica, same dir: loads see warmup records (not payloads),
+    # recompile, and still serve.
+    eng2 = Engine(disk_cache=DiskExecutableCache(tmp_path))
+    report2 = warm(eng2, [spec], batch_sizes=(4,), queries=[0])
+    s2 = eng2.disk_cache.stats()
+    assert report2["from_disk"] == 0
+    assert s2["warm_records"] >= 1
+    assert s2["disk_hits"] == 0
+    res2 = eng2.compile(spec).run_batch(np.asarray([0, 1], np.int32))
+    import jax
+
+    for a, b in zip(jax.tree.leaves(res1.value),
+                    jax.tree.leaves(res2.value)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,157 @@
+"""Compare fresh ``BENCH_*.json`` artifacts against committed baselines.
+
+The nightly job produces machine-readable benchmark artifacts
+(``benchmarks/common.emit_json``); this tool diffs them against the
+checked-in snapshots under ``benchmarks/baselines/`` so regressions
+surface in CI instead of in a human eyeballing artifact zips.
+
+Two classes of numeric leaf, two severities:
+
+* **ratio-type** metrics (name contains ``speedup``, ``ratio``,
+  ``vs_``, ``_over_``, ``gain``, ``accuracy``, ``coverage``) are
+  dimensionless and machine-independent — a real change in one is a
+  real change in the system.  A fresh value below HALF its baseline
+  **fails** the check (exit 1): that is a >2x regression of a quantity
+  host-load drift cannot plausibly produce.
+* everything else (wall times, q/s, byte counts) is host-dependent;
+  deviations beyond the tolerance band (default ±50%) only **warn**.
+  The nightly job stays green through runner roulette but the warning
+  lines land in the log.
+
+Usage:
+  python tools/bench_check.py --fresh-dir bench-out
+  python tools/bench_check.py --fresh-dir bench-out --update   # refresh
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+RATIO_MARKERS = (
+    "speedup", "ratio", "vs_", "_over_", "gain", "accuracy", "coverage",
+)
+# leaves that are config echoes, not measurements — never compared.
+SKIP_MARKERS = ("scale", "seed", "nnz", "n_vertices", "n_hyperedges")
+
+
+def is_ratio_metric(path: str) -> bool:
+    leaf = path.rsplit(".", 1)[-1].lower()
+    return any(m in leaf for m in RATIO_MARKERS)
+
+
+def _skip(path: str) -> bool:
+    leaf = path.rsplit(".", 1)[-1].lower()
+    return any(leaf == m or leaf.startswith(m + "_") for m in SKIP_MARKERS)
+
+
+def numeric_leaves(doc, prefix: str = "") -> dict:
+    """Flatten nested dicts/lists to ``dotted.path -> float`` leaves."""
+    out: dict[str, float] = {}
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            out.update(numeric_leaves(v, f"{prefix}.{k}" if prefix else k))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            out.update(numeric_leaves(v, f"{prefix}[{i}]"))
+    elif isinstance(doc, bool):
+        pass  # True/False are labels, not measurements
+    elif isinstance(doc, (int, float)):
+        out[prefix] = float(doc)
+    return out
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float):
+    """(failures, warnings) comparing one artifact's numeric leaves."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    f_leaves = numeric_leaves(fresh)
+    b_leaves = numeric_leaves(baseline)
+    for path, base in sorted(b_leaves.items()):
+        if _skip(path):
+            continue
+        if path not in f_leaves:
+            warnings.append(f"missing in fresh run: {path}")
+            continue
+        got = f_leaves[path]
+        if base == 0.0:
+            continue  # no meaningful ratio against a zero baseline
+        rel = got / base
+        if is_ratio_metric(path):
+            if rel < 0.5:
+                failures.append(
+                    f"{path}: {got:.4g} vs baseline {base:.4g} "
+                    f"({rel:.2f}x) — >2x regression of a ratio metric"
+                )
+            elif abs(rel - 1.0) > tolerance:
+                warnings.append(
+                    f"{path}: {got:.4g} vs baseline {base:.4g} "
+                    f"({rel:.2f}x)"
+                )
+        elif abs(rel - 1.0) > tolerance:
+            warnings.append(
+                f"{path}: {got:.4g} vs baseline {base:.4g} ({rel:.2f}x)"
+            )
+    for path in sorted(set(f_leaves) - set(b_leaves)):
+        if not _skip(path):
+            warnings.append(f"new metric (no baseline): {path}")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh-dir", default=".",
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--baseline-dir", default="benchmarks/baselines",
+                    help="directory of committed baseline snapshots")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="warn band for non-ratio leaves (0.5 = ±50%%)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh artifacts over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args(argv)
+
+    fresh_paths = sorted(glob.glob(
+        os.path.join(args.fresh_dir, "BENCH_*.json")
+    ))
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for p in fresh_paths:
+            dst = os.path.join(args.baseline_dir, os.path.basename(p))
+            shutil.copyfile(p, dst)
+            print(f"baseline updated: {dst}")
+        return 0
+
+    if not fresh_paths:
+        print(f"no BENCH_*.json under {args.fresh_dir}", file=sys.stderr)
+        return 2
+
+    any_failures = False
+    for p in fresh_paths:
+        name = os.path.basename(p)
+        bpath = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(bpath):
+            print(f"{name}: no baseline committed — skipped "
+                  f"(run with --update to add one)")
+            continue
+        with open(p) as f:
+            fresh = json.load(f)
+        with open(bpath) as f:
+            baseline = json.load(f)
+        failures, warnings = compare(fresh, baseline, args.tolerance)
+        status = "FAIL" if failures else "ok"
+        print(f"{name}: {status} "
+              f"({len(failures)} failures, {len(warnings)} warnings)")
+        for w in warnings:
+            print(f"  warn: {w}")
+        for fmsg in failures:
+            print(f"  FAIL: {fmsg}")
+        any_failures = any_failures or bool(failures)
+    return 1 if any_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
