@@ -1,0 +1,176 @@
+"""Digest-stability audit: ``stable_digest`` against cache poisoning.
+
+The disk executable cache (`serve/cache.py`) re-keys the in-memory
+executable signature (`serving.signature`, object-identity based) into
+a cross-process ``stable_digest``.  Three invariants make that safe,
+and this pass checks each over a real grid of spec / axis / bucket
+combinations:
+
+* **identity** — rebuilding the same spec from scratch (fresh function
+  objects, fresh arrays) digests identically: object identity must not
+  leak in, or a new process never hits the store;
+* **collision-freedom** — semantically distinct signatures (different
+  algorithm, pads, dtype, query axis, batch pad, design point) all
+  digest differently: a collision silently serves the WRONG executable;
+* **cross-process determinism** — a child interpreter (fresh
+  ``PYTHONHASHSEED``, fresh object addresses) computes the same digest
+  per grid point: hash randomization and ``repr`` addresses must not
+  reach the hash.
+
+``grid_digests`` is the child-process entry point (imported by the
+subprocess the audit spawns).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from repro.analysis.findings import Finding
+
+
+def build_grid() -> list[tuple[str, object]]:
+    """(name, signature-tuple) per grid point — every point is built
+    through the REAL key path (``serving.signature`` over real specs /
+    configs), and names describe what makes each point distinct."""
+    import jax.numpy as jnp
+
+    from repro.algorithms import (
+        label_propagation_spec,
+        pagerank_spec,
+        shortest_paths_spec,
+    )
+    from repro.core import serving
+    from repro.core.executor import ExecutionConfig
+    from repro.data import powerlaw_hypergraph
+
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    specs = {
+        "pagerank": pagerank_spec(hg, iters=6),
+        "sssp": shortest_paths_spec(hg, 0, 12),
+        "labelprop": label_propagation_spec(hg, iters=6),
+    }
+    base = dict(
+        shard_len_pad=0, n_parts=1,
+        v_attr_sig=None, he_attr_sig=None,
+        e_attr_sig=("float32", (64,)),
+        query_sig=None, batch_pad=None, delivery_sig=None,
+    )
+    grid: list[tuple[str, object]] = []
+    for sname, spec in specs.items():
+        for backend in ("local", "sharded"):
+            for nv_pad, ne_pad, nnz_pad in ((64, 64, 128), (128, 64, 256)):
+                for batch_pad in (None, 8):
+                    cfg = ExecutionConfig(backend=backend, jit=True)
+                    name = (f"{sname}/{backend}/pads={nv_pad}-{ne_pad}-"
+                            f"{nnz_pad}/b={batch_pad}")
+                    grid.append((name, serving.signature(
+                        spec, cfg, nv_pad=nv_pad, ne_pad=ne_pad,
+                        nnz_pad=nnz_pad,
+                        **{**base, "batch_pad": batch_pad},
+                    )))
+    # design-point and query-axis variants on one base point
+    spec = specs["sssp"]
+    cfg = ExecutionConfig(backend="local", jit=True)
+    pads = dict(nv_pad=64, ne_pad=64, nnz_pad=128)
+    grid.append(("sssp/stats", serving.signature(
+        spec, ExecutionConfig(backend="local", jit=True,
+                              collect_stats=True),
+        **pads, **base,
+    )))
+    grid.append(("sssp/delivery=xla", serving.signature(
+        spec, ExecutionConfig(backend="local", jit=True, delivery="xla"),
+        **pads, **base,
+    )))
+    grid.append(("sssp/query=int32", serving.signature(
+        spec, cfg, **pads, **{**base, "query_sig": ("int32", ())},
+    )))
+    grid.append(("sssp/eattr=f64", serving.signature(
+        spec, cfg, **pads,
+        **{**base, "e_attr_sig": ("float64", (64,))},
+    )))
+    grid.append(("sssp/initmsg0", serving.signature(
+        spec._replace(initial_msg=jnp.float32(0.0)), cfg, **pads, **base,
+    )))
+    return grid
+
+
+def grid_digests(digest_fn=None) -> dict[str, str]:
+    """name -> stable_digest over the grid (the child-process entry)."""
+    from repro.serve.cache import stable_digest
+
+    fn = digest_fn or stable_digest
+    return {name: fn(key) for name, key in build_grid()}
+
+
+_CHILD = (
+    "import json, sys; from repro.analysis.digest import grid_digests; "
+    "json.dump(grid_digests(), sys.stdout)"
+)
+
+
+def audit(digest_fn=None, *, cross_process: bool = True) -> list[Finding]:
+    """Run all three digest invariants; a non-default ``digest_fn`` is
+    the mutation hook the negative tests use (it skips the subprocess,
+    which could not import the injected function)."""
+    findings: list[Finding] = []
+    first = grid_digests(digest_fn)
+    second = grid_digests(digest_fn)  # fresh specs, fresh closures
+
+    for name, d in first.items():
+        if second[name] != d:
+            findings.append(Finding(
+                rule="digest-identity", path="<digest-audit>", line=0,
+                scope=name,
+                message=("rebuilding the spec changed its digest "
+                         f"({d[:12]} -> {second[name][:12]})"),
+            ))
+
+    by_digest: dict[str, str] = {}
+    for name, d in first.items():
+        if d in by_digest:
+            findings.append(Finding(
+                rule="digest-collision", path="<digest-audit>", line=0,
+                scope=name,
+                message=(f"collides with `{by_digest[d]}` "
+                         f"(digest {d[:12]})"),
+            ))
+        else:
+            by_digest[d] = name
+
+    if cross_process and digest_fn is None:
+        env = {**os.environ, "PYTHONHASHSEED": "random"}
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (_src_dir(), env.get("PYTHONPATH")) if p
+        )
+        out = subprocess.run(
+            [sys.executable, "-c", _CHILD], env=env,
+            capture_output=True, text=True, timeout=300,
+        )
+        if out.returncode != 0:
+            findings.append(Finding(
+                rule="digest-unstable", path="<digest-audit>", line=0,
+                scope="<subprocess>",
+                message=f"child audit failed: {out.stderr[-300:]}",
+            ))
+            return findings
+        child = json.loads(out.stdout)
+        for name, d in first.items():
+            if child.get(name) != d:
+                findings.append(Finding(
+                    rule="digest-unstable", path="<digest-audit>", line=0,
+                    scope=name,
+                    message=("digest differs across processes "
+                             f"({d[:12]} vs "
+                             f"{str(child.get(name))[:12]})"),
+                ))
+    return findings
+
+
+def _src_dir() -> str:
+    import repro
+
+    return os.path.dirname(os.path.dirname(os.path.abspath(
+        repro.__file__
+    )))

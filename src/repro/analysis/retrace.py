@@ -1,0 +1,103 @@
+"""Retrace sentinel: the compile-once contract as a reusable guard.
+
+``Engine`` counts real retraces (``trace_hook`` fires from inside every
+jitted body, so cache hits don't count).  The sentinel turns that
+counter into an assertion usable three ways:
+
+* ``with assert_no_retrace(engine):`` around any warm-path block —
+  raises ``RetraceError`` listing the trace delta if anything
+  recompiled;
+* the ``no_retrace`` pytest fixture (``tests/conftest.py``) — the
+  replacement for the hand-rolled before/after counter assertions in
+  ``test_compile.py`` / ``test_serve.py``;
+* ``serve.warm(..., require_no_retrace=True)`` — a runtime boot guard:
+  a replica that was supposed to come up entirely from the disk store
+  fails fast instead of silently eating compile latency.
+
+``retrace_smoke`` is the live CLI pass: it compiles one small spec and
+drives the three warm paths that must not retrace (same-bucket second
+hypergraph, query changes, batch-size changes within a bucket pad).
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.analysis.findings import Finding
+
+
+class RetraceError(AssertionError):
+    """A region that promised zero retraces compiled something."""
+
+    def __init__(self, traces: int, allow: int, label: str):
+        self.traces = traces
+        self.allow = allow
+        self.label = label
+        super().__init__(
+            f"{label}: {traces} retrace(s) inside a no-retrace region "
+            f"(allowed {allow}) — the compile-once contract is broken"
+        )
+
+
+@contextlib.contextmanager
+def assert_no_retrace(engine, *, allow: int = 0, label: str = "no_retrace"):
+    """Assert the engine's trace counter moves by at most ``allow``
+    inside the block.  Yields a callable returning the delta so far."""
+    before = engine.cache_stats()["traces"]
+
+    def delta() -> int:
+        return engine.cache_stats()["traces"] - before
+
+    yield delta
+    traces = delta()
+    if traces > allow:
+        raise RetraceError(traces, allow, label)
+
+
+def _same_bucket_pair():
+    from repro.core import bucket_dim
+    from repro.data import powerlaw_hypergraph
+
+    hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
+    want = (bucket_dim(47), bucket_dim(33), bucket_dim(hg.nnz))
+    for seed in range(1, 60):
+        hg2 = powerlaw_hypergraph(52, 36, mean_cardinality=4, seed=seed)
+        got = (bucket_dim(52), bucket_dim(36), bucket_dim(hg2.nnz))
+        if got == want:
+            return hg, hg2
+    raise AssertionError("no same-bucket draw found")
+
+
+def retrace_smoke() -> list[Finding]:
+    """Live check of the warm paths that must never retrace: the
+    same-bucket second hypergraph, query changes, and batch-size
+    changes inside one bucket pad."""
+    import numpy as np
+
+    from repro.algorithms import shortest_paths_spec
+    from repro.core import Engine
+
+    findings: list[Finding] = []
+    hg, hg2 = _same_bucket_pair()
+    eng = Engine()
+    compiled = eng.compile(shortest_paths_spec(hg, 0, 8))
+    compiled.run()                                   # first trace: expected
+    compiled.run_batch(np.arange(8, dtype=np.int32))  # batch trace: expected
+
+    def check(label: str, fn) -> None:
+        try:
+            with assert_no_retrace(eng, label=label):
+                fn()
+        except RetraceError as err:
+            findings.append(Finding(
+                rule="retrace", path="<retrace-smoke>", line=0,
+                scope=label, message=str(err),
+            ))
+
+    check("same-bucket-second-hypergraph", lambda: compiled.run(hg2))
+    check("query-change", lambda: [
+        compiled.run(query=s) for s in (0, 3, 11, 46)
+    ])
+    check("batch-size-within-pad", lambda: compiled.run_batch(
+        np.arange(5, dtype=np.int32)
+    ))
+    return findings

@@ -94,6 +94,8 @@ def _query_sig(query: Pytree):
 def _canon_query(query: Pytree) -> Pytree:
     """Strong-typed device arrays: python ints must produce the same
     signature (and no weak-type retrace) as explicit numpy scalars."""
+    # analysis: ignore[host-sync] — queries arrive as host values;
+    # strong-typing them IS the ingest contract (scalar-sized)
     return jax.tree.map(lambda x: jnp.asarray(np.asarray(x)), query)
 
 
@@ -108,7 +110,10 @@ def _initial_msg_sig(initial_msg: Pytree):
     return (
         treedef,
         tuple(
+            # analysis: ignore[host-sync] — memoized once per
+            # CompiledAlgorithm (see _execute), not per request
             (arr.dtype.name, arr.shape, arr.tobytes())
+            # analysis: ignore[host-sync] — same memo
             for arr in (np.asarray(leaf) for leaf in leaves)
         ),
     )
@@ -129,6 +134,7 @@ def signature(
     query_sig,
     batch_pad: int | None,
     delivery_sig=None,
+    initial_msg_sig=None,
 ):
     """The executable cache key.
 
@@ -142,12 +148,19 @@ def signature(
     bucket); ``None`` on the reference path.  Same-bucket hypergraphs
     usually share them, but a degree-regime shift legitimately
     recompiles.
+
+    ``initial_msg_sig``: the precomputed ``_initial_msg_sig`` value.
+    Callers on the per-request path (``CompiledAlgorithm._execute``)
+    pass their memo so the key never re-serializes the initial message
+    per request (host-sync lint finding, fixed by memoization); ``None``
+    recomputes for one-shot callers.
     """
     return (
         spec.v_program,
         spec.he_program,
         spec.bind_query if query_sig is not None else None,
-        _initial_msg_sig(spec.initial_msg),
+        (initial_msg_sig if initial_msg_sig is not None
+         else _initial_msg_sig(spec.initial_msg)),
         cfg.backend,
         cfg.axis,
         cfg.max_iters,
@@ -368,6 +381,9 @@ class CompiledAlgorithm:
     # request.  Keyed by object identity like the Engine's plan cache
     # (hypergraphs are treated as immutable); bounded to the last few.
     _pad_cache: list = dataclasses.field(default_factory=list)
+    # Memoized _initial_msg_sig: serializing the initial message is
+    # host-side work that must not run per request (host-sync lint).
+    _init_msg_sig: Any = None
 
     # -- public API --------------------------------------------------------
 
@@ -594,6 +610,8 @@ class CompiledAlgorithm:
             if batch is not None and has_query
             else query
         )
+        if self._init_msg_sig is None:
+            self._init_msg_sig = _initial_msg_sig(spec.initial_msg)
         key = signature(
             spec, cfg,
             nv_pad=prep["nv_pad"], ne_pad=prep["ne_pad"],
@@ -603,6 +621,7 @@ class CompiledAlgorithm:
             query_sig=_query_sig(one_query),
             batch_pad=b_pad,
             delivery_sig=prep["delivery_sig"],
+            initial_msg_sig=self._init_msg_sig,
         )
         meta = {
             "algorithm": spec.name,

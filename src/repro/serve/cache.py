@@ -362,6 +362,7 @@ def warm(
     batch_sizes: tuple[int, ...] = (),
     queries: list[Any] | None = None,
     hg=None,
+    require_no_retrace: bool = False,
 ) -> dict:
     """Boot-time warmup: bring ``engine`` to warm-path q/s before the
     first request.
@@ -380,7 +381,20 @@ def warm(
 
     where each source is ``disk`` (deserialized), ``aot`` (compiled +
     stored), or ``jit`` (no disk cache attached / unloweable).
+
+    ``require_no_retrace=True`` wraps the boot in the analysis-layer
+    retrace sentinel: a replica that was expected to come up entirely
+    from the disk store raises ``RetraceError`` instead of silently
+    paying compile latency on its first requests.
     """
+    from repro.analysis.retrace import assert_no_retrace
+
+    if require_no_retrace:
+        with assert_no_retrace(engine, label="serve.warm"):
+            return warm(
+                engine, specs, batch_sizes=batch_sizes, queries=queries,
+                hg=hg, require_no_retrace=False,
+            )
     t0 = time.perf_counter()
     before = engine.cache_stats()["traces"]
     paths: dict[str, dict] = {}

@@ -232,6 +232,8 @@ class AdaptiveDelay:
         self, *, execute_s: float, occupancy: float, reason: str
     ) -> float:
         """Fold in one flush; returns the updated delay (seconds)."""
+        # analysis: ignore[host-sync] — host float in, host float out;
+        # no device value crosses this controller
         execute_s = max(float(execute_s), 0.0)
         self._exec_ewma = (
             execute_s

@@ -21,3 +21,17 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running subprocess/integration tests"
     )
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def no_retrace():
+    """The retrace sentinel as a fixture: ``with no_retrace(engine):``
+    asserts the engine's trace counter doesn't move inside the block
+    (``allow=`` budgets expected compiles).  Replaces the hand-rolled
+    before/after ``cache_stats()["traces"]`` assertions."""
+    from repro.analysis.retrace import assert_no_retrace
+
+    return assert_no_retrace

@@ -83,7 +83,7 @@ def test_compiled_stats_mask_bucket_padding():
 # the executable cache: hits, zero retraces, misses
 # --------------------------------------------------------------------------
 
-def test_same_bucket_second_hypergraph_zero_retraces():
+def test_same_bucket_second_hypergraph_zero_retraces(no_retrace):
     hg, hg2 = same_bucket_pair()
     eng = Engine()
     compiled = eng.compile(shortest_paths_spec(hg, 0, 12))
@@ -92,11 +92,9 @@ def test_same_bucket_second_hypergraph_zero_retraces():
     assert stats["misses"] == 1 and stats["traces"] == 1
 
     # same bucket, different structure: cache hit, NO retrace
-    before = eng.cache_stats()["traces"]
-    got = compiled.run(hg2).value
-    after = eng.cache_stats()
-    assert after["traces"] == before, "same-bucket serve retraced"
-    assert after["hits"] >= 1
+    with no_retrace(eng, label="same-bucket serve"):
+        got = compiled.run(hg2).value
+    assert eng.cache_stats()["hits"] >= 1
 
     # ... and the served result is exactly a fresh run on hg2
     ref = eng.run(shortest_paths_spec(hg2, 0, 12)).value
@@ -106,24 +104,25 @@ def test_same_bucket_second_hypergraph_zero_retraces():
         )
 
 
-def test_second_compile_of_same_spec_hits_cache():
+def test_second_compile_of_same_spec_hits_cache(no_retrace):
     hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
     eng = Engine()
     spec = shortest_paths_spec(hg, 0, 12)
     eng.compile(spec).run()
     assert eng.cache_stats()["misses"] == 1
-    eng.compile(spec).run()  # same programs, same bucket -> hit
+    with no_retrace(eng, label="second compile of same spec"):
+        eng.compile(spec).run()  # same programs, same bucket -> hit
     stats = eng.cache_stats()
     assert stats["misses"] == 1 and stats["hits"] == 1
-    assert stats["traces"] == 1
 
 
-def test_query_change_never_recompiles():
+def test_query_change_never_recompiles(no_retrace):
     hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
     eng = Engine()
     compiled = eng.compile(shortest_paths_spec(hg, 0, 12))
-    for s in (0, 3, 11, 46):
-        compiled.run(query=s)
+    with no_retrace(eng, allow=1, label="query sweep"):
+        for s in (0, 3, 11, 46):
+            compiled.run(query=s)
     assert eng.cache_stats()["traces"] == 1
 
 
@@ -236,14 +235,13 @@ def test_run_batch_matches_sequential_local():
         )
 
 
-def test_run_batch_bucket_shares_executable_across_batch_sizes():
+def test_run_batch_bucket_shares_executable_across_batch_sizes(no_retrace):
     hg = powerlaw_hypergraph(47, 33, mean_cardinality=4, seed=0)
     eng = Engine()
     compiled = eng.compile(shortest_paths_spec(hg, 0, 8))
     compiled.run_batch(np.arange(8, dtype=np.int32))
-    before = eng.cache_stats()["traces"]
-    out = compiled.run_batch(np.arange(5, dtype=np.int32)).value
-    assert eng.cache_stats()["traces"] == before  # B=5 pads into B=8
+    with no_retrace(eng, label="B=5 pads into B=8"):
+        out = compiled.run_batch(np.arange(5, dtype=np.int32)).value
     assert out[0].shape == (5, hg.n_vertices)
 
 
@@ -406,10 +404,9 @@ SHARDED_SERVING = textwrap.dedent("""
                 hg2 = cand
                 break
         assert hg2 is not None
-        before = eng.cache_stats()['traces']
-        out2 = compiled.run_batch(sources, hg=hg2).value
-        assert eng.cache_stats()['traces'] == before, (
-            backend, 'same-bucket retrace')
+        from repro.analysis.retrace import assert_no_retrace
+        with assert_no_retrace(eng, label=backend + ' same-bucket'):
+            out2 = compiled.run_batch(sources, hg=hg2).value
         ref2 = local.run(shortest_paths_spec(hg2, 0, 12)).value
         assert np.array_equal(np.asarray(ref2[0]), np.asarray(out2[0][0]),
                               equal_nan=True), (backend, 'hg2')

@@ -490,3 +490,96 @@ def test_untraced_serve_skips_measured_enrichment(hg):
     compiled = eng.compile(alg.shortest_paths_spec(hg, 0, 4))
     res = compiled.run_batch(np.asarray([0, 1], np.int32))
     assert "measured" not in res.decision  # zero-overhead contract
+
+
+# --------------------------------------------------------------------------
+# registry under concurrency (the serve tier is multi-threaded)
+# --------------------------------------------------------------------------
+
+def test_registry_concurrent_registration_snapshot_and_pruning():
+    """Registration, owned-instrument writes, weakref pruning, and
+    snapshots racing from many threads — including a REAL ``Frontend``
+    worker thread serving submits — must neither raise nor corrupt the
+    snapshot (every value a snapshot reports is internally consistent)."""
+    import threading
+
+    from repro.obs.metrics import (
+        MetricsRegistry,
+        reset_default_registry,
+        weak_provider,
+    )
+    from repro.serve import Frontend
+
+    reg = reset_default_registry()
+    assert isinstance(reg, MetricsRegistry)
+    errors: list[BaseException] = []
+    stop = threading.Event()
+
+    def snapshotter():
+        while not stop.is_set():
+            try:
+                snap = reg.snapshot()
+                # pruning must never surface a dead provider as None
+                assert all(v is not None for v in snap.values())
+            except BaseException as err:  # noqa: BLE001
+                errors.append(err)
+                return
+
+    def churn(k):
+        # short-lived owners: their weak providers go dead mid-run and
+        # must be pruned by concurrent snapshots without KeyErrors
+        class Owner:
+            def __init__(self, i):
+                self.i = i
+
+            def stats(self):
+                return {"i": self.i}
+
+        try:
+            for i in range(300):
+                o = Owner(i)
+                reg.register_provider(f"churn{k}", weak_provider(o.stats))
+                reg.counter(f"count{k}").inc()
+                reg.gauge(f"gauge{k}").set(i)
+                reg.histogram(f"hist{k}").record(1e-4 * (i + 1))
+                del o
+        except BaseException as err:  # noqa: BLE001
+            errors.append(err)
+
+    # a real Frontend: its ServeMetrics registers a provider into the
+    # default registry and its worker thread completes futures while
+    # the snapshotters race
+    class Fake:
+        def run_batch(self, queries, hg=None):
+            import numpy as _np
+
+            class R:
+                value = {"out": _np.asarray(queries)}
+                supersteps_executed = None
+
+            return R()
+
+    fe = Frontend(Engine(), max_batch=4, max_delay_ms=0.5)
+    fe.register("sig", Fake())
+
+    threads = [threading.Thread(target=snapshotter) for _ in range(3)]
+    threads += [threading.Thread(target=churn, args=(k,)) for k in range(4)]
+    with fe:
+        for t in threads:
+            t.start()
+        futs = [fe.submit("sig", query=q) for q in range(64)]
+        for f in futs:
+            f.result(timeout=30)
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+    assert not errors, errors[:3]
+
+    gc.collect()
+    snap = reg.snapshot()     # post-churn: dead churn providers pruned
+    snap2 = reg.snapshot()
+    assert not any(k.startswith("churn") for k in snap2)
+    for k in range(4):
+        assert snap[f"count{k}"] == 300
+        assert snap[f"hist{k}"]["count"] == 300
+    assert snap["serve.frontend"]["completed"] == 64

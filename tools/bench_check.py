@@ -130,6 +130,14 @@ def main(argv=None) -> int:
         return 2
 
     any_failures = False
+    fresh_names = {os.path.basename(p) for p in fresh_paths}
+    for bpath in sorted(glob.glob(
+        os.path.join(args.baseline_dir, "BENCH_*.json")
+    )):
+        bname = os.path.basename(bpath)
+        if bname not in fresh_names:
+            print(f"warn: baseline {bname} has no fresh counterpart — "
+                  f"the bench that produced it no longer runs?")
     for p in fresh_paths:
         name = os.path.basename(p)
         bpath = os.path.join(args.baseline_dir, name)
@@ -137,10 +145,16 @@ def main(argv=None) -> int:
             print(f"{name}: no baseline committed — skipped "
                   f"(run with --update to add one)")
             continue
-        with open(p) as f:
-            fresh = json.load(f)
-        with open(bpath) as f:
-            baseline = json.load(f)
+        try:
+            with open(p) as f:
+                fresh = json.load(f)
+            with open(bpath) as f:
+                baseline = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            # a truncated artifact from a killed runner should surface
+            # as a warning line, not crash the whole comparison
+            print(f"{name}: warn: unreadable artifact ({exc}) — skipped")
+            continue
         failures, warnings = compare(fresh, baseline, args.tolerance)
         status = "FAIL" if failures else "ok"
         print(f"{name}: {status} "
