@@ -55,9 +55,10 @@ def _trace(hg, rng):
     ]
 
 
-def _replay(engine, hg, trace) -> tuple[float, dict]:
+def _replay(engine, hg, trace, resilience=True) -> tuple[float, dict]:
     """One front-end lifetime serving ``trace``; (wall_s, stats)."""
-    fe = Frontend(engine, max_batch=MAX_BATCH, max_delay_ms=MAX_DELAY_MS)
+    fe = Frontend(engine, max_batch=MAX_BATCH, max_delay_ms=MAX_DELAY_MS,
+                  resilience=resilience)
     for key, spec in _specs(hg).items():
         fe.register(key, spec)
     t0 = time.perf_counter()
@@ -98,6 +99,32 @@ def run() -> None:
     assert speedup >= 5.0, (
         f"warm q/s only {speedup:.1f}x cold (< 5x): serve-tier compile "
         "amortization regressed"
+    )
+
+    # -- fault-free overhead: resilient default vs resilience=False ------
+    # The zero-overhead-when-healthy contract of the fault-tolerance
+    # layer: deadline/breaker/retry checks on the warm path must cost
+    # < 2% q/s vs a front-end with every resilience mechanism compiled
+    # out.  Best-of-3 each side to shed scheduler noise.
+    plain_wall_s = min(
+        _replay(eng_cold, hg, trace, resilience=False)[0]
+        for _ in range(3)
+    )
+    resil_wall_s = min(
+        _replay(eng_cold, hg, trace, resilience=True)[0]
+        for _ in range(3)
+    )
+    plain_qps = REQUESTS / plain_wall_s
+    resil_qps = REQUESTS / resil_wall_s
+    overhead = resil_wall_s / plain_wall_s - 1.0
+    row(f"serve_tier/faultfree_plain{REQUESTS}", plain_wall_s * 1e6,
+        f"qps={plain_qps:.1f}")
+    row(f"serve_tier/faultfree_resilient{REQUESTS}", resil_wall_s * 1e6,
+        f"qps={resil_qps:.1f};overhead={overhead * 100:+.2f}%")
+    assert resil_qps >= 0.98 * plain_qps, (
+        f"resilient warm q/s {resil_qps:.1f} < 98% of plain "
+        f"{plain_qps:.1f}: the fault-tolerance layer is taxing the "
+        "fault-free hot path"
     )
 
     # -- disk-warmed boot: new replica, same cache dir -------------------
@@ -149,6 +176,9 @@ def run() -> None:
         "disk_boot_traces": boot_disk["traces"],
         "disk_qps": disk_qps,
         "disk_over_cold": disk_speedup,
+        "faultfree_plain_qps": plain_qps,
+        "faultfree_resilient_qps": resil_qps,
+        "faultfree_overhead_ratio": resil_wall_s / plain_wall_s,
         "queue_wait": warm_stats["queue_wait"],
         "execute": warm_stats["execute"],
         "flush_reasons": warm_stats["flush_reasons"],

@@ -48,6 +48,12 @@ RULES = {
         "zero-overhead-when-absent contract needs a `tracer is None` "
         "fast path (or `maybe_span`)"
     ),
+    "swallowed-error": (
+        "a bare/broad `except` on a serve or superstep hot path "
+        "discards the error: route it through the faults taxonomy "
+        "(re-raise, forward the bound exception, or resolve a future "
+        "with it) or annotate the intentional swallow"
+    ),
     "retrace": (
         "a warm-path serve recompiled: the compile-once contract "
         "(same bucket + same design point = one executable) is broken"

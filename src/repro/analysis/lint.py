@@ -93,7 +93,10 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
     ),
     "serve/frontend.py": (
         "Frontend.submit", "Frontend.pump", "Frontend._worker",
-        "Frontend._run_flush", "_stack", "_unstack", "_block",
+        "Frontend._serve_loop", "Frontend._run_flush",
+        "Frontend._execute_requests", "Frontend._attempt",
+        "Frontend._requeue_after_crash", "Frontend._fail",
+        "_stack", "_unstack", "_block",
     ),
     "serve/queue.py": (
         "CoalescingBatcher.submit", "CoalescingBatcher.poll",
@@ -107,6 +110,46 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
 }
 
 _SUPPRESS_RE = re.compile(r"#\s*analysis:\s*ignore(?:\[([a-z\-,\s]+)\])?")
+
+# Broad exception classes a handler may catch without naming the real
+# failure; and the faults-taxonomy / error-forwarding names whose
+# presence in a handler body means the error was routed, not swallowed.
+_BROAD_EXC = {"Exception", "BaseException"}
+_ERROR_ROUTES = {
+    "FaultError", "InjectedFault", "TransientExecuteError",
+    "DeadlineExceeded", "FrontendClosed", "PoisonQuery", "CircuitOpen",
+    "CorruptCacheEntry", "CheckpointError", "is_transient",
+    "set_exception",
+}
+
+
+def _broad_handler(h: ast.ExceptHandler) -> bool:
+    if h.type is None:
+        return True
+    elts = h.type.elts if isinstance(h.type, ast.Tuple) else [h.type]
+    return any(
+        (_dotted(e) or "").rsplit(".", 1)[-1] in _BROAD_EXC for e in elts
+    )
+
+
+def _handler_routes(h: ast.ExceptHandler) -> bool:
+    """Does the handler re-raise, forward the bound exception, or reach
+    into the faults taxonomy?  Any of these counts as routing."""
+    for node in ast.walk(h):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.Name):
+            if node.id in _ERROR_ROUTES:
+                return True
+            if (
+                h.name is not None
+                and node.id == h.name
+                and isinstance(node.ctx, ast.Load)
+            ):
+                return True
+        if isinstance(node, ast.Attribute) and node.attr in _ERROR_ROUTES:
+            return True
+    return False
 
 
 def _dotted(node: ast.expr) -> str | None:
@@ -525,6 +568,8 @@ class _FileLinter:
                     f"`{kind}` on traced value(s) {', '.join(names)} "
                     "inside a traced region",
                 )
+        if isinstance(stmt, ast.Try):
+            self._check_swallowed(stmt, ctx)
         if isinstance(stmt, ast.If):
             is_tracer, absent = _is_tracer_none_test(stmt.test)
             if is_tracer and not absent:
@@ -576,6 +621,34 @@ class _FileLinter:
                 "host-sync", node, scope,
                 f"{kind} on hot path `{scope}` outside any tracer guard",
             )
+
+    # -- swallowed-error ---------------------------------------------------
+
+    def _check_swallowed(self, stmt: ast.Try, ctx: _Ctx) -> None:
+        """Bare/broad ``except`` that discards the error.  On the serve /
+        superstep hot paths this is a finding (a fault silently eaten
+        there breaks the every-request-resolves invariant); elsewhere
+        it is reported as a cold-path count."""
+        scope = ctx.qual or "<module>"
+        hot = bool(self.hot) and _is_hot(scope, self.hot)
+        for h in stmt.handlers:
+            if not _broad_handler(h) or _handler_routes(h):
+                continue
+            what = (
+                "bare `except:`" if h.type is None
+                else "broad `except`"
+            )
+            if hot:
+                self._emit(
+                    "swallowed-error", h, scope,
+                    f"{what} on hot path `{scope}` discards the error "
+                    "without routing it through the faults taxonomy",
+                )
+            else:
+                self._emit(
+                    "swallowed-error", h, scope, f"{what} (cold path)",
+                    classification="cold-path",
+                )
 
     # -- static-arg-array --------------------------------------------------
 

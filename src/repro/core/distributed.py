@@ -434,6 +434,7 @@ def build_distributed_runner(
     max_iters: int,
     backend: str = "replicated",
     batch: int | None = None,
+    resumable: bool = False,
 ):
     """Build the ``shard_map``-wrapped superstep scan for one design point.
 
@@ -481,17 +482,11 @@ def build_distributed_runner(
     edge_spec = P(ctx.axis)  # leading dim = n_parts, one row per partition
     programs = (v_program, he_program)
 
-    def run(v_attr, he_attr, msg0, v_deg, he_card, src, dst, mask,
-            nv_real, ne_real, delivery):
-        # shard_map gives each device its [1, shard_len] edge row; squeeze.
-        src, dst, mask = src[0], dst[0], mask[0]
-        delivery_local = (
-            jax.tree.map(lambda a: a[0], delivery)
-            if delivery is not None
-            else (None, None)
-        )
-        degs_local = (v_deg, he_card)
-
+    def _body(superstep, degs_local, src, dst, mask, nv_real, ne_real,
+              delivery_local):
+        # The per-iteration scan body — ONE definition shared by the
+        # single-shot and resumable runners, so a chunked (checkpointed)
+        # distributed run agrees bitwise with an uninterrupted one.
         def body(carry, _):
             step, v_a, he_a, msg, halted = carry
 
@@ -515,6 +510,19 @@ def build_distributed_runner(
             )
             return (step + 2, nv_a, nhe_a, nmsg, halted | halted2), stats
 
+        return body
+
+    def run(v_attr, he_attr, msg0, v_deg, he_card, src, dst, mask,
+            nv_real, ne_real, delivery):
+        # shard_map gives each device its [1, shard_len] edge row; squeeze.
+        src, dst, mask = src[0], dst[0], mask[0]
+        delivery_local = (
+            jax.tree.map(lambda a: a[0], delivery)
+            if delivery is not None
+            else (None, None)
+        )
+        body = _body(superstep, (v_deg, he_card), src, dst, mask,
+                     nv_real, ne_real, delivery_local)
         init = (
             jnp.asarray(0, jnp.int32), v_attr, he_attr, msg0,
             jnp.asarray(False),
@@ -523,6 +531,23 @@ def build_distributed_runner(
             body, init, None, length=max_iters
         )
         return v_a, he_a, v_trace, he_trace
+
+    def run_resumable(v_attr, he_attr, msg, halted, step0, v_deg, he_card,
+                      src, dst, mask, nv_real, ne_real, delivery):
+        # The checkpoint/resume seam: scan carry in, scan carry out.
+        src, dst, mask = src[0], dst[0], mask[0]
+        delivery_local = (
+            jax.tree.map(lambda a: a[0], delivery)
+            if delivery is not None
+            else (None, None)
+        )
+        body = _body(superstep, (v_deg, he_card), src, dst, mask,
+                     nv_real, ne_real, delivery_local)
+        init = (step0, v_attr, he_attr, msg, halted)
+        (step, v_a, he_a, msg, halted), (v_trace, he_trace) = jax.lax.scan(
+            body, init, None, length=max_iters
+        )
+        return v_a, he_a, msg, halted, step, v_trace, he_trace
 
     def run_batch(v_attr_b, he_attr_b, msg0_b, v_deg, he_card, src, dst,
                   mask, nv_real, ne_real, delivery):
@@ -557,6 +582,22 @@ def build_distributed_runner(
     # construction, which 0.4.x check_rep cannot prove.  The activity
     # traces are likewise partition-uniform (psum'd / computed on the
     # replicated full-size buffers), so their out_spec is P().
+    if resumable:
+        if batch is not None:
+            raise ValueError("resumable runner is unbatched")
+        return _shard_map(
+            run_resumable,
+            mesh=mesh,
+            in_specs=(
+                state_spec, state_spec, state_spec, P(), P(),
+                deg_spec, deg_spec,
+                edge_spec, edge_spec, edge_spec, P(), P(),
+                edge_spec,
+            ),
+            out_specs=(
+                state_spec, state_spec, state_spec, P(), P(), P(), P(),
+            ),
+        )
     if batch is None:
         return _shard_map(
             run,
@@ -656,3 +697,82 @@ def distributed_compute(
     if return_stats:
         return out, (v_trace, he_trace)
     return out
+
+
+def distributed_initial_state(hg: HyperGraph, plan: PartitionPlan,
+                              initial_msg: Pytree) -> dict:
+    """The explicit (partition-padded) scan carry ``distributed_compute``
+    starts from, as a checkpoint-serializable pytree — the distributed
+    twin of ``engine.initial_superstep_state``."""
+    n_parts = plan.n_parts
+    nv_pad = _pad_to(hg.n_vertices, n_parts)
+    ne_pad = _pad_to(hg.n_hyperedges, n_parts)
+    return {
+        "step": jnp.asarray(0, jnp.int32),
+        "v_attr": jax.tree.map(
+            lambda x: _pad_leading(x, nv_pad), hg.v_attr
+        ),
+        "he_attr": jax.tree.map(
+            lambda x: _pad_leading(x, ne_pad), hg.he_attr
+        ),
+        "msg": constant_initial_msg(initial_msg, nv_pad),
+        "halted": jnp.asarray(False),
+    }
+
+
+def distributed_compute_resumable(
+    hg: HyperGraph,
+    plan: PartitionPlan,
+    mesh: Mesh,
+    n_iters: int,
+    state: dict,
+    v_program: Program,
+    he_program: Program,
+    *,
+    axis: str = "data",
+    backend: str = "replicated",
+    delivery: str = "xla",
+):
+    """Run ``n_iters`` superstep pairs from an explicit carry ``state``
+    (see ``distributed_initial_state``); returns ``(state', trace)``.
+
+    ``distributed_compute`` with the scan carry lifted to an argument —
+    the distributed checkpoint/resume seam.  The per-iteration body is
+    shared with the single-shot runner, so chunked runs compose bitwise
+    into an uninterrupted run (same contract as the local engine's
+    ``compute_resumable``)."""
+    n_parts = plan.n_parts
+    assert mesh.shape[axis] == n_parts
+    nv_pad = _pad_to(hg.n_vertices, n_parts)
+    ne_pad = _pad_to(hg.n_hyperedges, n_parts)
+    ctx = DistContext(
+        axis=axis, n_parts=n_parts, nv_pad=nv_pad, ne_pad=ne_pad,
+    )
+    v_deg = _pad_leading(hg.degrees(), nv_pad)
+    he_card = _pad_leading(hg.cardinalities(), ne_pad)
+    layouts = None
+    if delivery == "pallas_fused":
+        layouts = build_shard_delivery(
+            plan.shard_src, plan.shard_dst, plan.shard_mask,
+            nv_pad, ne_pad,
+        )
+    mapped = build_distributed_runner(
+        mesh, ctx, v_program, he_program, n_iters, backend=backend,
+        resumable=True,
+    )
+    with mesh:
+        v_a, he_a, msg, halted, step, v_tr, he_tr = jax.jit(mapped)(
+            state["v_attr"], state["he_attr"], state["msg"],
+            state["halted"], state["step"],
+            v_deg, he_card,
+            jnp.asarray(plan.shard_src), jnp.asarray(plan.shard_dst),
+            jnp.asarray(plan.shard_mask),
+            jnp.asarray(hg.n_vertices, jnp.int32),
+            jnp.asarray(hg.n_hyperedges, jnp.int32),
+            layouts,
+        )
+    out = {
+        "step": step, "v_attr": v_a, "he_attr": he_a,
+        "msg": msg, "halted": halted,
+    }
+    return out, (v_tr, he_tr)

@@ -169,6 +169,43 @@ def superstep_pair(
     return v_out.attr, he_out.attr, msg_to_v_next, stats
 
 
+def _halting_body(hg, v_program, he_program, v_deg, he_card, n_real,
+                  delivery):
+    """The per-iteration scan body shared by ``compute`` and
+    ``compute_resumable`` — ONE definition, so a chunked
+    (checkpointed) run and an uninterrupted run execute the same
+    per-iteration computation and agree bitwise by construction."""
+
+    def body(carry, _):
+        step, v_attr, he_attr, msg_to_v, halted = carry
+
+        def run(args):
+            step, v_attr, he_attr, msg_to_v = args
+            nv_attr, nhe_attr, nmsg, stats = superstep_pair(
+                hg, step, v_attr, he_attr, msg_to_v,
+                v_program, he_program, v_deg, he_card, n_real, delivery,
+            )
+            now_halted = (stats.v_active + stats.he_active) == 0
+            return (nv_attr, nhe_attr, nmsg, now_halted, stats)
+
+        def skip(args):
+            _, v_attr, he_attr, msg_to_v = args
+            stats = SuperstepStats(
+                v_active=jnp.asarray(0, jnp.int32),
+                he_active=jnp.asarray(0, jnp.int32),
+            )
+            return (v_attr, he_attr, msg_to_v, jnp.asarray(True), stats)
+
+        nv_attr, nhe_attr, nmsg, halted2, stats = jax.lax.cond(
+            halted, skip, run, (step, v_attr, he_attr, msg_to_v)
+        )
+        return (
+            step + 2, nv_attr, nhe_attr, nmsg, halted | halted2,
+        ), (stats.v_active, stats.he_active)
+
+    return body
+
+
 def compute(
     hg: HyperGraph,
     max_iters: int,
@@ -198,33 +235,9 @@ def compute(
     he_card = hg.cardinalities()
     msg0 = constant_initial_msg(initial_msg, hg.n_vertices)
 
-    def body(carry, _):
-        step, v_attr, he_attr, msg_to_v, halted = carry
-
-        def run(args):
-            step, v_attr, he_attr, msg_to_v = args
-            nv_attr, nhe_attr, nmsg, stats = superstep_pair(
-                hg, step, v_attr, he_attr, msg_to_v,
-                v_program, he_program, v_deg, he_card, n_real, delivery,
-            )
-            now_halted = (stats.v_active + stats.he_active) == 0
-            return (nv_attr, nhe_attr, nmsg, now_halted, stats)
-
-        def skip(args):
-            _, v_attr, he_attr, msg_to_v = args
-            stats = SuperstepStats(
-                v_active=jnp.asarray(0, jnp.int32),
-                he_active=jnp.asarray(0, jnp.int32),
-            )
-            return (v_attr, he_attr, msg_to_v, jnp.asarray(True), stats)
-
-        nv_attr, nhe_attr, nmsg, halted2, stats = jax.lax.cond(
-            halted, skip, run, (step, v_attr, he_attr, msg_to_v)
-        )
-        return (
-            step + 2, nv_attr, nhe_attr, nmsg, halted | halted2,
-        ), (stats.v_active, stats.he_active)
-
+    body = _halting_body(
+        hg, v_program, he_program, v_deg, he_card, n_real, delivery
+    )
     init = (
         jnp.asarray(0, jnp.int32),
         hg.v_attr,
@@ -241,9 +254,63 @@ def compute(
     return out
 
 
+def initial_superstep_state(hg: HyperGraph, initial_msg: Pytree) -> dict:
+    """The explicit scan carry ``compute`` starts from, as a pytree a
+    checkpoint can serialize: superstep counter, both attribute trees,
+    the in-flight vertex-bound message buffer, and the halt flag."""
+    return {
+        "step": jnp.asarray(0, jnp.int32),
+        "v_attr": hg.v_attr,
+        "he_attr": hg.he_attr,
+        "msg": constant_initial_msg(initial_msg, hg.n_vertices),
+        "halted": jnp.asarray(False),
+    }
+
+
+def compute_resumable(
+    hg: HyperGraph,
+    n_iters: int,
+    state: dict,
+    v_program: Program,
+    he_program: Program,
+    *,
+    n_real: tuple | None = None,
+    delivery: tuple | None = None,
+):
+    """Run ``n_iters`` superstep pairs from an explicit carry ``state``
+    (see ``initial_superstep_state``); returns ``(state', trace)``.
+
+    This is ``compute`` with the scan carry lifted to an argument — the
+    checkpoint/resume seam.  Running k1 pairs, snapshotting, and running
+    k2 more from the snapshot executes the identical per-iteration body
+    (``_halting_body``) in the identical order as one ``k1 + k2`` run,
+    so resumed results are bitwise those of an uninterrupted run.
+    """
+    body = _halting_body(
+        hg, v_program, he_program, hg.degrees(), hg.cardinalities(),
+        n_real, delivery,
+    )
+    init = (
+        state["step"], state["v_attr"], state["he_attr"],
+        state["msg"], state["halted"],
+    )
+    (step, v_attr, he_attr, msg, halted), trace = jax.lax.scan(
+        body, init, None, length=n_iters
+    )
+    out = {
+        "step": step, "v_attr": v_attr, "he_attr": he_attr,
+        "msg": msg, "halted": halted,
+    }
+    return out, trace
+
+
 compute_jit = partial(jax.jit, static_argnames=("max_iters", "v_program",
                                                 "he_program",
                                                 "return_stats"))(compute)
+
+compute_resumable_jit = partial(
+    jax.jit, static_argnames=("n_iters", "v_program", "he_program")
+)(compute_resumable)
 
 
 def batch_halting_scan(

@@ -128,8 +128,23 @@ class ExecutionConfig:
     replicated_bias: float = 0.5
     intersect_kernel: str = "auto"
     delivery: str = "auto"
+    # Fault tolerance (repro.faults): snapshot the superstep scan carry
+    # every N pairs into ``checkpoint_dir`` (train/checkpoint.py format)
+    # so a killed run resumes mid-algorithm bitwise-equal to an
+    # uninterrupted one.  ``None`` = no checkpointing (the default; the
+    # hot path is untouched).
+    checkpoint_every: int | None = None
+    checkpoint_dir: str | None = None
 
     def __post_init__(self):
+        if self.checkpoint_every is not None and self.checkpoint_every < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1, got {self.checkpoint_every}"
+            )
+        if self.checkpoint_every is not None and self.checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every needs checkpoint_dir (where snapshots go)"
+            )
         if self.representation not in REPRESENTATIONS:
             raise ValueError(
                 f"representation must be one of {REPRESENTATIONS}, "
@@ -594,6 +609,7 @@ class Engine:
         disk_cache=None,
         tracer=None,
         metrics=None,
+        fault_injector=None,
         **overrides: Any,
     ):
         cfg = config if config is not None else ExecutionConfig()
@@ -637,6 +653,13 @@ class Engine:
         self.metrics.register_provider(
             "engine.exec_cache", weak_provider(self.cache_stats)
         )
+        # Fault injection (repro.faults): duck-typed like tracer /
+        # disk_cache — instrumented paths branch on ``is None`` first,
+        # so an absent injector costs nothing.  The attached disk cache
+        # shares the injector (its read/write/deserialize points).
+        self.fault_injector = fault_injector
+        if fault_injector is not None and disk_cache is not None:
+            disk_cache.fault_injector = fault_injector
 
     # -- resolution ---------------------------------------------------------
 
@@ -1188,15 +1211,34 @@ class Engine:
                 algorithm=name, backend="local",
                 delivery=resolved.delivery,
             ) as sp:
-                out = fn(
-                    spec.hg0,
-                    max_iters=resolved.max_iters,
-                    initial_msg=spec.initial_msg,
-                    v_program=spec.v_program,
-                    he_program=spec.he_program,
-                    return_stats=resolved.collect_stats,
-                    delivery=delivery,
-                )
+                if resolved.checkpoint_every is not None:
+                    from repro.faults.checkpoint import checkpointed_compute
+
+                    out = checkpointed_compute(
+                        spec.hg0,
+                        resolved.max_iters,
+                        spec.initial_msg,
+                        spec.v_program,
+                        spec.he_program,
+                        every=resolved.checkpoint_every,
+                        ckpt_dir=resolved.checkpoint_dir,
+                        return_stats=resolved.collect_stats,
+                        delivery=delivery,
+                        jit=resolved.jit,
+                        tracer=self.tracer,
+                        metrics=self.metrics,
+                        fault_injector=self.fault_injector,
+                    )
+                else:
+                    out = fn(
+                        spec.hg0,
+                        max_iters=resolved.max_iters,
+                        initial_msg=spec.initial_msg,
+                        v_program=spec.v_program,
+                        he_program=spec.he_program,
+                        return_stats=resolved.collect_stats,
+                        delivery=delivery,
+                    )
                 t1 = time.perf_counter()
                 jax.block_until_ready(out)
                 t2 = time.perf_counter()
@@ -1225,19 +1267,43 @@ class Engine:
             algorithm=name, backend=resolved.backend,
             delivery=resolved.delivery, n_parts=plan.n_parts,
         ) as sp:
-            out = distributed_compute(
-                spec.hg0,
-                plan,
-                self.mesh,
-                max_iters=resolved.max_iters,
-                initial_msg=spec.initial_msg,
-                v_program=spec.v_program,
-                he_program=spec.he_program,
-                axis=resolved.axis,
-                backend=resolved.backend,
-                return_stats=resolved.collect_stats,
-                delivery=resolved.delivery,
-            )
+            if resolved.checkpoint_every is not None:
+                from repro.faults.checkpoint import (
+                    checkpointed_distributed_compute,
+                )
+
+                out = checkpointed_distributed_compute(
+                    spec.hg0,
+                    plan,
+                    self.mesh,
+                    resolved.max_iters,
+                    spec.initial_msg,
+                    spec.v_program,
+                    spec.he_program,
+                    every=resolved.checkpoint_every,
+                    ckpt_dir=resolved.checkpoint_dir,
+                    axis=resolved.axis,
+                    backend=resolved.backend,
+                    delivery=resolved.delivery,
+                    return_stats=resolved.collect_stats,
+                    tracer=self.tracer,
+                    metrics=self.metrics,
+                    fault_injector=self.fault_injector,
+                )
+            else:
+                out = distributed_compute(
+                    spec.hg0,
+                    plan,
+                    self.mesh,
+                    max_iters=resolved.max_iters,
+                    initial_msg=spec.initial_msg,
+                    v_program=spec.v_program,
+                    he_program=spec.he_program,
+                    axis=resolved.axis,
+                    backend=resolved.backend,
+                    return_stats=resolved.collect_stats,
+                    delivery=resolved.delivery,
+                )
             t1 = time.perf_counter()
             jax.block_until_ready(out)
             t2 = time.perf_counter()

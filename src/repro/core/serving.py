@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.api import constant_initial_msg
 from repro.core.engine import compute, compute_batch
 from repro.core.hypergraph import HyperGraph
+from repro.faults.errors import is_transient
 from repro.kernels.deliver import layout_pair
 
 Pytree = Any
@@ -384,6 +385,9 @@ class CompiledAlgorithm:
     # Memoized _initial_msg_sig: serializing the initial message is
     # host-side work that must not run per request (host-sync lint).
     _init_msg_sig: Any = None
+    # Memoized graceful-degradation twin: same spec served with
+    # delivery="xla" after a pallas_fused layout/execute failure.
+    _xla_twin: Any = None
 
     # -- public API --------------------------------------------------------
 
@@ -401,9 +405,22 @@ class CompiledAlgorithm:
         if (query is None and spec.bind_query is not None
                 and spec.init is not None and spec.query0 is not None):
             query = spec.query0
-        prep = self._prepared(hg, rebind=query is not None)
-        q = _canon_query(query) if query is not None else None
-        return self._execute(prep, q, batch=None)
+        if self.config.checkpoint_every is not None:
+            return self._run_checkpointed(hg, query)
+        try:
+            prep = self._prepared(hg, rebind=query is not None)
+            q = _canon_query(query) if query is not None else None
+            return self._execute(prep, q, batch=None)
+        except ValueError:
+            raise
+        except Exception as err:
+            twin = (
+                self._degraded_sibling(err)
+                if not is_transient(err) else None
+            )
+            if twin is None:
+                raise
+            return twin.run(hg, query=query)
 
     def run_batch(self, queries: Any, hg: HyperGraph | None = None):
         """Serve a batch: vmap the executable over the spec's query axis.
@@ -420,24 +437,38 @@ class CompiledAlgorithm:
                 f"spec {self.spec.name!r} has no bind_query: declare the "
                 "per-request axis to serve batched queries"
             )
-        prep = self._prepared(hg, rebind=True)
-        queries = _canon_query(queries)
-        sizes = {int(jnp.shape(leaf)[0]) for leaf in jax.tree.leaves(queries)}
-        if len(sizes) != 1:
-            raise ValueError(
-                f"query leaves disagree on batch size: {sorted(sizes)}"
+        try:
+            prep = self._prepared(hg, rebind=True)
+            queries_c = _canon_query(queries)
+            sizes = {
+                int(jnp.shape(leaf)[0])
+                for leaf in jax.tree.leaves(queries_c)
+            }
+            if len(sizes) != 1:
+                raise ValueError(
+                    f"query leaves disagree on batch size: {sorted(sizes)}"
+                )
+            b = sizes.pop()
+            b_pad = bucket_dim(b, floor=BATCH_FLOOR)
+            # Repeat-pad with the last query: always a *valid* request,
+            # and the padded rows are sliced off the results.
+            queries_p = jax.tree.map(
+                lambda leaf: jnp.concatenate(
+                    [leaf] + [leaf[-1:]] * (b_pad - b)
+                ) if b_pad > b else leaf,
+                queries_c,
             )
-        b = sizes.pop()
-        b_pad = bucket_dim(b, floor=BATCH_FLOOR)
-        # Repeat-pad with the last query: always a *valid* request, and
-        # the padded rows are sliced off the results.
-        queries_p = jax.tree.map(
-            lambda leaf: jnp.concatenate(
-                [leaf] + [leaf[-1:]] * (b_pad - b)
-            ) if b_pad > b else leaf,
-            queries,
-        )
-        return self._execute(prep, queries_p, batch=(b, b_pad))
+            return self._execute(prep, queries_p, batch=(b, b_pad))
+        except ValueError:
+            raise
+        except Exception as err:
+            twin = (
+                self._degraded_sibling(err)
+                if not is_transient(err) else None
+            )
+            if twin is None:
+                raise
+            return twin.run_batch(queries, hg=hg)
 
     def warmup(
         self,
@@ -493,6 +524,131 @@ class CompiledAlgorithm:
                 prep, queries, batch=(b_pad, b_pad), warm_only=True
             )
         return report
+
+    # -- fault tolerance ---------------------------------------------------
+
+    def _degraded_sibling(self, err: Exception):
+        """Graceful-degradation chain, delivery link: a ``pallas_fused``
+        layout-build or execute failure must not fail the request when
+        the ``xla`` lowering can still serve it.
+
+        Returns the memoized ``delivery="xla"`` twin of this handle (one
+        compile, shared across subsequent degradations), or ``None``
+        when degradation does not apply — already on xla, nothing left
+        to fall back to.  Non-sticky by design: the next request tries
+        the fused path again, so one fused failure does not permanently
+        forfeit the faster lowering.
+
+        Callers gate this on ``not is_transient(err)``: transient
+        failures propagate so the serve tier retries them on the SAME
+        delivery — the two lowerings agree on shapes, not on float
+        rounding, so switching deliveries is reserved for faults that
+        would otherwise fail the request outright.
+        """
+        if self.config.delivery != "pallas_fused":
+            return None
+        engine = self.engine
+        if self._xla_twin is None:
+            self._xla_twin = CompiledAlgorithm(
+                engine=engine,
+                spec=self.spec,
+                config=dataclasses.replace(self.config, delivery="xla"),
+                decision={**self.decision, "degraded_from": "pallas_fused"},
+                _plan0=self._plan0,
+            )
+        metrics = getattr(engine, "metrics", None)
+        if metrics is not None:
+            metrics.counter("faults.delivery_degraded").inc()
+        tracer = getattr(engine, "tracer", None)
+        if tracer is not None:
+            from repro.obs.trace import maybe_span
+
+            with maybe_span(
+                tracer, "faults.degrade_delivery", cat="faults",
+                algorithm=self.spec.name, error=type(err).__name__,
+            ):
+                pass
+        return self._xla_twin
+
+    def _run_checkpointed(self, hg, query):
+        """Route through the chunked checkpoint/resume drivers
+        (``repro.faults.checkpoint``) instead of the cached executable.
+
+        The chunked drivers run the SAME per-iteration scan body as the
+        compiled path (shared ``_halting_body`` / distributed ``_body``)
+        on the same padded buffers, snapshotting the carry every
+        ``checkpoint_every`` superstep pairs — results are bitwise-equal
+        to the uninterrupted executable and a killed run resumes from
+        ``checkpoint_dir``'s latest snapshot."""
+        from repro.core.executor import Result
+        from repro.faults.checkpoint import (
+            checkpointed_compute,
+            checkpointed_distributed_compute,
+        )
+
+        cfg = self.config
+        spec = self.spec
+        engine = self.engine
+        prep = self._prepared(hg, rebind=query is not None)
+        q = _canon_query(query) if query is not None else None
+        nv, ne = prep["nv"], prep["ne"]
+        plan = prep["plan"]
+        injector = getattr(engine, "fault_injector", None)
+        stats = None
+        if cfg.backend == "local":
+            hgq = prep["hgp"]
+            if q is not None:
+                hgq = spec.bind_query(hgq, q)
+            out = checkpointed_compute(
+                hgq, cfg.max_iters, spec.initial_msg,
+                spec.v_program, spec.he_program,
+                every=cfg.checkpoint_every, ckpt_dir=cfg.checkpoint_dir,
+                return_stats=cfg.collect_stats,
+                n_real=(jnp.asarray(nv, jnp.int32),
+                        jnp.asarray(ne, jnp.int32)),
+                delivery=prep["delivery"], jit=cfg.jit,
+                tracer=engine.tracer, metrics=engine.metrics,
+                fault_injector=injector,
+            )
+            if cfg.collect_stats:
+                out, stats = out
+            # The chunked driver ran on the padded buffers; slice back.
+            out = out.with_attrs(
+                v_attr=jax.tree.map(lambda x: x[:nv], out.v_attr),
+                he_attr=jax.tree.map(lambda x: x[:ne], out.he_attr),
+            )
+        else:
+            base = prep["base"]
+            hgq = spec.bind_query(base, q) if q is not None else base
+            out = checkpointed_distributed_compute(
+                hgq, plan, engine.mesh, cfg.max_iters, spec.initial_msg,
+                spec.v_program, spec.he_program,
+                every=cfg.checkpoint_every, ckpt_dir=cfg.checkpoint_dir,
+                axis=cfg.axis, backend=cfg.backend,
+                delivery=cfg.delivery,
+                return_stats=cfg.collect_stats,
+                tracer=engine.tracer, metrics=engine.metrics,
+                fault_injector=injector,
+            )
+            if cfg.collect_stats:
+                out, stats = out
+        return Result(
+            value=spec.extract(out),
+            config=cfg,
+            representation=cfg.representation,
+            backend=cfg.backend,
+            partition=plan.name if plan is not None else None,
+            partition_stats=plan.stats if plan is not None else None,
+            superstep_stats=stats,
+            supersteps_executed=None,
+            decision={
+                **self.decision,
+                "checkpointed": {
+                    "every": cfg.checkpoint_every,
+                    "dir": cfg.checkpoint_dir,
+                },
+            },
+        )
 
     # -- internals ---------------------------------------------------------
 
@@ -555,6 +711,11 @@ class CompiledAlgorithm:
                 algorithm=self.spec.name, nnz_pad=int(nnz_pad),
                 nv_pad=int(nv_pad), ne_pad=int(ne_pad),
             ):
+                inj = getattr(self.engine, "fault_injector", None)
+                if inj is not None:
+                    inj.maybe_raise(
+                        "layout.build", algorithm=self.spec.name
+                    )
                 if cfg.backend == "local":
                     delivery = layout_pair(
                         hgp.src, hgp.dst, hgp.e_mask, nv_pad, ne_pad
@@ -633,6 +794,19 @@ class CompiledAlgorithm:
             "batch_pad": b_pad,
             "n_parts": prep["n_parts"],
         }
+
+        # Fault injection on the execute seam: one attribute load and a
+        # None-check when no injector is attached (the same zero-overhead
+        # contract as the tracer below).  Warmup never "executes".
+        inj = getattr(engine, "fault_injector", None)
+        if inj is not None and not warm_only:
+            inj.maybe_raise(
+                "execute", algorithm=spec.name, backend=cfg.backend,
+                delivery=cfg.delivery,
+                # analysis: ignore[host-sync] — b is the host-side batch
+                # count (Python int or None), never a device value
+                batch=int(b) if b is not None else 0,
+            )
 
         # Tracing on the serve hot path is strictly opt-in: without a
         # tracer this closure is exactly ``exe(*args)`` — no timing, no
@@ -725,6 +899,9 @@ class CompiledAlgorithm:
             if executed is not None:
                 try:
                     measured["supersteps"] = int(np.asarray(executed))
+                # analysis: ignore[swallowed-error] — best-effort metric
+                # enrichment: losing "supersteps" must not fail a serve
+                # that already produced its result
                 except Exception:
                     pass
             if prep["delivery"] is not None and not distributed:

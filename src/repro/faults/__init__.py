@@ -1,0 +1,49 @@
+"""Fault tolerance: injection harness, typed errors, checkpoint/resume.
+
+MESH inherits fault tolerance from Spark (RDD lineage replays a lost
+executor's superstep); this reproduction has no such substrate, so the
+reliability layer is built here instead:
+
+* ``errors``   — the typed taxonomy every degradation path speaks
+  (``FaultError`` and friends); callers can catch one base class.
+* ``plan``     — ``FaultPlan``: named failure points x deterministic
+  trigger schedules (nth-call / every-nth / probabilistic-with-seed /
+  always), JSON round-trippable for ``--fault-plan``.
+* ``inject``   — ``FaultInjector``: attaches to ``Engine`` /
+  ``Frontend`` duck-typed like ``tracer`` / ``disk_cache``; hot paths
+  branch on ``is None`` so an absent injector costs nothing.
+* ``checkpoint`` — superstep checkpoint/resume on the iterative seam
+  (``ExecutionConfig.checkpoint_every``), the engine-side analogue of
+  lineage: resume mid-algorithm bitwise-equal to an uninterrupted run.
+"""
+from repro.faults.errors import (
+    CheckpointError,
+    CircuitOpen,
+    CorruptCacheEntry,
+    DeadlineExceeded,
+    FaultError,
+    FrontendClosed,
+    InjectedFault,
+    PoisonQuery,
+    TransientExecuteError,
+    is_transient,
+)
+from repro.faults.inject import FaultInjector
+from repro.faults.plan import FAULT_POINTS, FaultPlan, FaultRule
+
+__all__ = [
+    "FAULT_POINTS",
+    "CheckpointError",
+    "CircuitOpen",
+    "CorruptCacheEntry",
+    "DeadlineExceeded",
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultRule",
+    "FrontendClosed",
+    "InjectedFault",
+    "PoisonQuery",
+    "TransientExecuteError",
+    "is_transient",
+]

@@ -1,0 +1,184 @@
+"""Superstep checkpoint/resume: the engine-side analogue of lineage.
+
+MESH-on-Spark replays a lost executor's superstep from RDD lineage; the
+equivalent here is snapshotting the scan carry — ``(step, v_attr,
+he_attr, msg_to_v, halted)`` — every ``checkpoint_every`` superstep
+pairs, so a killed process resumes mid-algorithm instead of restarting.
+
+Bitwise contract (tested): the drivers below run the SAME per-iteration
+scan body as ``compute`` / ``distributed_compute`` (shared via
+``_halting_body`` / the distributed ``_body``), just split into
+host-side chunks of ``every`` pairs with the carry threaded through.
+Running k1 pairs, snapshotting, and running k2 more therefore executes
+the identical computation in the identical order as one uninterrupted
+``k1 + k2`` run — resumed results and activity traces are bitwise equal.
+
+Snapshots reuse ``train/checkpoint.py`` verbatim: per-leaf ``.npy`` +
+hashed JSON manifest, atomic ``.tmp``-then-rename publish, and
+``latest_checkpoint`` crash-loop restart semantics.  A checkpoint that
+fails to restore (corrupt, foreign, wrong shapes) degrades gracefully:
+the run restarts from superstep 0 rather than raising — the same
+quarantine-and-recompute posture as the disk executable cache.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    compute_resumable,
+    compute_resumable_jit,
+    initial_superstep_state,
+)
+from repro.obs.trace import maybe_span
+from repro.train.checkpoint import (
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+def _restore_or_fresh(ckpt_dir, template, tracer, metrics):
+    """Latest durable snapshot, or the fresh carry when none loads."""
+    path = latest_checkpoint(ckpt_dir) if ckpt_dir else None
+    if path is None:
+        return template, 0
+    try:
+        with maybe_span(tracer, "faults.checkpoint_restore", cat="faults",
+                        path=path):
+            state, done = restore_checkpoint(path, template)
+        if metrics is not None:
+            metrics.counter("faults.checkpoint.restored").inc()
+        return state, int(done)
+    except Exception:
+        # Degrade, don't die: a corrupt snapshot must not be worse than
+        # having no snapshot at all.
+        if metrics is not None:
+            metrics.counter("faults.checkpoint.restore_failed").inc()
+        return template, 0
+
+
+def _finish_traces(traces, done, max_iters):
+    """Concatenate per-chunk traces, zero-padding iterations skipped
+    after global halt — matching ``compute``'s full-length trace."""
+    tail = max_iters - done
+    if tail:
+        zeros = jnp.zeros((tail,), jnp.int32)
+        traces.append((zeros, zeros))
+    v_tr = jnp.concatenate([t[0] for t in traces])
+    he_tr = jnp.concatenate([t[1] for t in traces])
+    return v_tr, he_tr
+
+
+def checkpointed_compute(
+    hg,
+    max_iters: int,
+    initial_msg,
+    v_program,
+    he_program,
+    *,
+    every: int,
+    ckpt_dir: str | None = None,
+    return_stats: bool = False,
+    n_real=None,
+    delivery=None,
+    jit: bool = True,
+    tracer=None,
+    metrics=None,
+    fault_injector=None,
+):
+    """``engine.compute`` in checkpointed chunks of ``every`` superstep
+    pairs; resumes from ``ckpt_dir``'s latest snapshot when one exists.
+
+    Same signature contract as ``compute``: returns the updated
+    hypergraph (plus the full-length ``(v_trace, he_trace)`` when
+    ``return_stats``)."""
+    template = initial_superstep_state(hg, initial_msg)
+    state, done = _restore_or_fresh(ckpt_dir, template, tracer, metrics)
+    runner = compute_resumable_jit if jit else compute_resumable
+    traces = []
+    while done < max_iters:
+        k = min(every, max_iters - done)
+        state, tr = runner(
+            hg, k, state, v_program, he_program,
+            n_real=n_real, delivery=delivery,
+        )
+        traces.append(tr)
+        done += k
+        if ckpt_dir:
+            with maybe_span(tracer, "faults.checkpoint_save", cat="faults",
+                            step=done):
+                save_checkpoint(ckpt_dir, done, state)
+            if metrics is not None:
+                metrics.counter("faults.checkpoint.saved").inc()
+        if fault_injector is not None:
+            fault_injector.maybe_raise("checkpoint.chunk", step=done)
+        if bool(state["halted"]):  # analysis: ignore[host-sync] — chunk boundary, cold path
+            break
+    out = hg.with_attrs(
+        v_attr=state["v_attr"], he_attr=state["he_attr"]
+    )
+    if return_stats:
+        return out, _finish_traces(traces, done, max_iters)
+    return out
+
+
+def checkpointed_distributed_compute(
+    hg,
+    plan,
+    mesh,
+    max_iters: int,
+    initial_msg,
+    v_program,
+    he_program,
+    *,
+    every: int,
+    ckpt_dir: str | None = None,
+    axis: str = "data",
+    backend: str = "replicated",
+    delivery: str = "xla",
+    return_stats: bool = False,
+    tracer=None,
+    metrics=None,
+    fault_injector=None,
+):
+    """``distributed_compute`` in checkpointed chunks — the sharded twin
+    of ``checkpointed_compute``; one snapshot covers the full padded
+    carry, so an elastic restart restores under the current mesh."""
+    from repro.core.distributed import (
+        distributed_compute_resumable,
+        distributed_initial_state,
+    )
+
+    template = distributed_initial_state(hg, plan, initial_msg)
+    state, done = _restore_or_fresh(ckpt_dir, template, tracer, metrics)
+    traces = []
+    while done < max_iters:
+        k = min(every, max_iters - done)
+        state, tr = distributed_compute_resumable(
+            hg, plan, mesh, k, state, v_program, he_program,
+            axis=axis, backend=backend, delivery=delivery,
+        )
+        traces.append(tr)
+        done += k
+        if ckpt_dir:
+            with maybe_span(tracer, "faults.checkpoint_save", cat="faults",
+                            step=done):
+                save_checkpoint(ckpt_dir, done, state)
+            if metrics is not None:
+                metrics.counter("faults.checkpoint.saved").inc()
+        if fault_injector is not None:
+            fault_injector.maybe_raise("checkpoint.chunk", step=done)
+        if bool(state["halted"]):  # analysis: ignore[host-sync] — chunk boundary, cold path
+            break
+    import jax
+
+    unpad_v = jax.tree.map(
+        lambda x: x[: hg.n_vertices], state["v_attr"]
+    )
+    unpad_he = jax.tree.map(
+        lambda x: x[: hg.n_hyperedges], state["he_attr"]
+    )
+    out = hg.with_attrs(v_attr=unpad_v, he_attr=unpad_he)
+    if return_stats:
+        return out, _finish_traces(traces, done, max_iters)
+    return out

@@ -1,0 +1,150 @@
+"""``FaultPlan``: a deterministic schedule of injected failures.
+
+A plan is a list of ``FaultRule``s.  Each rule names a **failure
+point** — a string the instrumented code passes to
+``FaultInjector.maybe_raise`` — and a **trigger schedule** deciding on
+which calls the fault fires:
+
+* ``always``            — every call (bounded by ``times``);
+* ``nth`` (``n=k``)     — exactly the k-th call to that point (1-based);
+* ``every`` (``n=k``)   — every k-th call;
+* ``prob`` (``p``, ``seed``) — each call independently with probability
+  ``p`` from a per-rule ``random.Random(seed)`` stream, so a plan is a
+  pure function of (seed, call sequence): same traffic, same faults.
+
+Plans round-trip through JSON (``to_json`` / ``from_json``) so the
+``--fault-plan`` CLI flag and the nightly chaos replay can commit them
+as artifacts.
+
+The failure points the engine + serve tier instrument today:
+
+==================  ======================================================
+``disk.read``       ``DiskExecutableCache.load`` (before the file read)
+``disk.write``      ``DiskExecutableCache.store`` (before the write)
+``disk.deserialize``executable deserialization after a successful read
+``compile.aot``     AOT ``lower().compile()`` in ``_DiskBackedExecutable``
+``layout.build``    fused-delivery layout build in ``_prepared``
+``execute``         ``CompiledAlgorithm`` run / run_batch dispatch
+``serve.flush``     ``Frontend._run_flush`` (before the batch executes)
+``serve.worker``    the front-end worker loop (models a thread crash)
+``checkpoint.chunk``after each superstep checkpoint chunk is saved
+==================  ======================================================
+
+Unknown points are legal in a plan (they simply never fire) so plans
+stay forward-compatible; ``FaultPlan.validate`` warns on typos.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+FAULT_POINTS = (
+    "disk.read",
+    "disk.write",
+    "disk.deserialize",
+    "compile.aot",
+    "layout.build",
+    "execute",
+    "serve.flush",
+    "serve.worker",
+    "checkpoint.chunk",
+)
+
+_TRIGGERS = ("always", "nth", "every", "prob")
+_ERRORS = ("transient", "fatal", "corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    """One scheduled failure: *where* (point), *when* (trigger), *what*
+    (error kind — ``transient``/``fatal`` map onto the taxonomy's
+    retryability split; ``corrupt`` raises ``CorruptCacheEntry``)."""
+
+    point: str
+    trigger: str = "always"        # always | nth | every | prob
+    n: int | None = None           # for nth / every
+    p: float | None = None         # for prob
+    seed: int = 0                  # for prob
+    times: int | None = None       # max total fires (None = unbounded)
+    error: str = "transient"       # transient | fatal | corrupt
+
+    def __post_init__(self):
+        if self.trigger not in _TRIGGERS:
+            raise ValueError(
+                f"unknown trigger {self.trigger!r}; one of {_TRIGGERS}"
+            )
+        if self.trigger in ("nth", "every") and (
+            self.n is None or self.n < 1
+        ):
+            raise ValueError(f"trigger {self.trigger!r} needs n >= 1")
+        if self.trigger == "prob" and not (
+            self.p is not None and 0.0 <= self.p <= 1.0
+        ):
+            raise ValueError("trigger 'prob' needs p in [0, 1]")
+        if self.error not in _ERRORS:
+            raise ValueError(
+                f"unknown error kind {self.error!r}; one of {_ERRORS}"
+            )
+
+    def to_dict(self) -> dict:
+        out = {"point": self.point, "trigger": self.trigger,
+               "error": self.error}
+        if self.n is not None:
+            out["n"] = self.n
+        if self.p is not None:
+            out["p"] = self.p
+        if self.seed:
+            out["seed"] = self.seed
+        if self.times is not None:
+            out["times"] = self.times
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultRule":
+        known = {f.name for f in dataclasses.fields(cls)}
+        extra = set(d) - known
+        if extra:
+            raise ValueError(f"unknown FaultRule fields: {sorted(extra)}")
+        return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An ordered tuple of rules; the unit the CLI / tests commit."""
+
+    rules: tuple[FaultRule, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+
+    def for_point(self, point: str) -> tuple[FaultRule, ...]:
+        return tuple(r for r in self.rules if r.point == point)
+
+    def validate(self) -> list[str]:
+        """Non-fatal lint: rule points nothing instruments today."""
+        return [
+            f"rule targets unknown point {r.point!r}"
+            for r in self.rules
+            if r.point not in FAULT_POINTS
+        ]
+
+    # -- JSON round trip ---------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"rules": [r.to_dict() for r in self.rules]}, indent=1
+        )
+
+    @classmethod
+    def from_json(cls, obj: Any) -> "FaultPlan":
+        """Accept a JSON string, a parsed dict, or a list of rule dicts."""
+        if isinstance(obj, (str, bytes)):
+            obj = json.loads(obj)
+        if isinstance(obj, dict):
+            obj = obj.get("rules", [])
+        if not isinstance(obj, (list, tuple)):
+            raise ValueError(
+                "fault plan must be {'rules': [...]} or a rule list"
+            )
+        return cls(rules=tuple(FaultRule.from_dict(dict(r)) for r in obj))

@@ -21,7 +21,14 @@ Flags of note: ``--mix`` sets the SSSP fraction of the trace;
 ``--no-warm`` skips the boot-time ``serve.warm`` pass (first requests
 then pay the compile); ``--cache-dir`` / ``$REPRO_CACHE_DIR`` place the
 on-disk executable store; ``--verify`` cross-checks a sample of served
-results bitwise against sequential ``CompiledAlgorithm.run``.
+results bitwise against sequential ``CompiledAlgorithm.run``;
+``--fault-plan`` (inline JSON or a file path) arms a ``FaultPlan`` of
+scheduled failures — the chaos replay: every request still resolves
+(result or typed error), successes stay bitwise-correct, and the
+per-point calls/fired report prints after the run, e.g.::
+
+  --fault-plan '{"rules": [{"point": "execute", "trigger": "every",
+                            "n": 7, "error": "transient"}]}'
 
 The device-count env fix must run before any jax import, hence the
 module-level pattern shared with ``repro.launch.hypergraph``.
@@ -72,6 +79,11 @@ def _parse(argv=None):
                     help="skip the boot-time warmup pass")
     ap.add_argument("--warm", dest="warm", action="store_true",
                     default=True)
+    ap.add_argument("--fault-plan", default=None, metavar="JSON",
+                    help="chaos mode: a FaultPlan as inline JSON or a "
+                         "file path; scheduled failures are injected at "
+                         "the engine/serve failure points and a per-point "
+                         "calls/fired report is printed after the replay")
     ap.add_argument("--verify", type=int, default=8,
                     help="cross-check N served results bitwise against "
                          "sequential run (0 = skip)")
@@ -108,9 +120,22 @@ def main(argv=None) -> int:
         from repro.obs import Tracer
 
         tracer = Tracer()
+    injector = None
+    if args.fault_plan:
+        from repro.faults import FaultInjector, FaultPlan
+
+        raw = args.fault_plan
+        if os.path.exists(raw):
+            with open(raw) as f:
+                raw = f.read()
+        plan = FaultPlan.from_json(raw)
+        for warning in plan.validate():
+            print(f"fault-plan: {warning}", file=sys.stderr)
+        injector = FaultInjector(plan)
+        print(f"fault-plan: {len(plan.rules)} rule(s) armed")
     engine = Engine(
         mesh=mesh, disk_cache=DiskExecutableCache(args.cache_dir),
-        tracer=tracer,
+        tracer=tracer, fault_injector=injector,
     )
     specs = {
         "sssp": alg.shortest_paths_spec(hg, source=0,
@@ -145,10 +170,22 @@ def main(argv=None) -> int:
     ]
 
     t0 = time.perf_counter()
+    results, failures = [], []
     with fe:
         futs = [(key, q, fe.submit(key, query=q)) for key, q in trace]
-        results = [(key, q, f.result()) for key, q, f in futs]
+        for key, q, f in futs:
+            try:
+                results.append((key, q, f.result()))
+            except RuntimeError as err:
+                # Under an injected fault plan, requests may resolve
+                # with a typed FaultError instead of a value — counted
+                # and reported, never a hang or a crashed replay.
+                failures.append((key, q, err))
     wall_s = time.perf_counter() - t0
+    if failures and injector is None:
+        print(f"{len(failures)} requests failed without a fault plan",
+              file=sys.stderr)
+        return 1
 
     st = fe.stats()
     print(f"served {len(results)} requests in {wall_s:.3f}s "
@@ -174,8 +211,19 @@ def main(argv=None) -> int:
         print(f"  adaptive delay: {a['delay_s'] * 1e3:.2f}ms "
               f"(exec ewma {a['exec_ewma_s'] * 1e3:.2f}ms, "
               f"{a['observations']} obs)")
+    if injector is not None:
+        snap = injector.snapshot()
+        print(f"  fault injection: {sum(snap['fired'].values())} fired "
+              f"across {sum(snap['calls'].values())} instrumented calls; "
+              f"{len(failures)} requests resolved with typed errors")
+        for point in sorted(snap["calls"]):
+            print(f"    {point}: calls={snap['calls'][point]} "
+                  f"fired={snap['fired'].get(point, 0)}")
 
     if args.verify:
+        # The sequential re-runs are the ORACLE, not the system under
+        # test: disarm injection so the reference path runs fault-free.
+        engine.fault_injector = None
         idx = rng.choice(len(results), size=min(args.verify, len(results)),
                          replace=False)
         for i in idx:

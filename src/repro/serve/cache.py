@@ -53,6 +53,12 @@ _FORMAT_WARMUP = "warmup-record"
 DEFAULT_CACHE_DIR = ".repro_cache"
 
 
+def _checksum(data: bytes) -> str:
+    """Content checksum over the serialized executable bytes: detects
+    truncation and bit-rot that still unpickle cleanly."""
+    return hashlib.sha256(data).hexdigest()
+
+
 def cache_root(path: str | os.PathLike | None = None) -> Path:
     """The on-disk cache location: explicit path, else ``$REPRO_CACHE_DIR``,
     else ``.repro_cache/`` under the working directory (gitignored)."""
@@ -187,7 +193,13 @@ class DiskExecutableCache:
             "disk_stores": 0,
             "disk_errors": 0,
             "warm_records": 0,
+            "disk_quarantined": 0,
+            "disk_migrated": 0,
         }
+        # Duck-typed like Engine.tracer: Engine(fault_injector=...)
+        # forwards its injector here so the disk.read / disk.write /
+        # disk.deserialize chaos points fire inside the real try blocks.
+        self.fault_injector = None
         default_registry().register_provider(
             "serve.disk_cache", weak_provider(self.stats)
         )
@@ -214,6 +226,16 @@ class DiskExecutableCache:
                 pass
             raise
 
+    def _quarantine(self, path: Path, err: Exception) -> None:
+        """Move a bad entry aside (``<name>.corrupt``, never deleted —
+        post-mortem evidence) so the next boot recompiles instead of
+        re-tripping over the same blob."""
+        try:
+            os.replace(path, str(path) + ".corrupt")
+            self._stats["disk_quarantined"] += 1
+        except OSError:
+            pass
+
     # -- load / store ------------------------------------------------------
 
     def load(self, key: Any):
@@ -221,29 +243,70 @@ class DiskExecutableCache:
 
         Loading never traces: the deserialized executable answers the
         first request at warm-path cost (the zero-retrace boot
-        property the serve-tier tests assert)."""
+        property the serve-tier tests assert).
+
+        Verification: executable entries carry a sha256 over the
+        serialized bytes; a truncated, bit-rotten, or foreign file —
+        unpicklable, unknown format, checksum mismatch, or failing
+        deserialization — is quarantined (renamed ``.corrupt``) and
+        reported as a miss, so the caller recompiles and re-publishes.
+        Legacy pre-checksum entries that still round-trip are upgraded
+        in place (``disk_migrated``)."""
+        from repro.faults.errors import CorruptCacheEntry
+
         digest = stable_digest(key)
         path = self._path(digest)
         if not path.exists():
             self._stats["disk_misses"] += 1
             return None
+        recorded = None
         try:
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_raise(
+                    "disk.read", digest=digest[:16]
+                )
             with open(path, "rb") as f:
                 payload = pickle.load(f)
-            if payload.get("format") != _FORMAT_EXECUTABLE:
+            fmt = (
+                payload.get("format") if isinstance(payload, dict) else None
+            )
+            if fmt == _FORMAT_WARMUP:
                 self._stats["warm_records"] += 1
                 self._stats["disk_misses"] += 1
                 return None
+            if fmt != _FORMAT_EXECUTABLE:
+                raise CorruptCacheEntry(
+                    f"unrecognized cache entry format {fmt!r}"
+                )
+            serialized = payload["serialized"]
+            recorded = payload.get("checksum")
+            if recorded is not None and _checksum(serialized) != recorded:
+                raise CorruptCacheEntry(
+                    f"checksum mismatch for {path.name}"
+                )
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_raise(
+                    "disk.deserialize", digest=digest[:16]
+                )
             from jax.experimental import serialize_executable as se
 
             compiled = se.deserialize_and_load(
-                payload["serialized"], payload["in_tree"],
-                payload["out_tree"],
+                serialized, payload["in_tree"], payload["out_tree"],
             )
-        except Exception:  # corrupt blob / incompatible runtime
+        except Exception as err:  # corrupt blob / incompatible runtime
             self._stats["disk_errors"] += 1
             self._stats["disk_misses"] += 1
+            self._quarantine(path, err)
             return None
+        if recorded is None:
+            # Migration: a pre-checksum entry that round-trips fine is
+            # rewritten with its checksum so the next boot verifies it.
+            try:
+                payload["checksum"] = _checksum(serialized)
+                self._write(digest, payload)
+                self._stats["disk_migrated"] += 1
+            except Exception:
+                pass  # upgrade is best-effort; the load itself succeeded
         self._stats["disk_hits"] += 1
         return compiled
 
@@ -253,6 +316,10 @@ class DiskExecutableCache:
         boot knows to re-trace eagerly.  Returns True on a full store."""
         digest = stable_digest(key)
         try:
+            if self.fault_injector is not None:
+                self.fault_injector.maybe_raise(
+                    "disk.write", digest=digest[:16]
+                )
             from jax.experimental import serialize_executable as se
 
             serialized, in_tree, out_tree = se.serialize(compiled)
@@ -260,6 +327,7 @@ class DiskExecutableCache:
                 "format": _FORMAT_EXECUTABLE,
                 "schema": _SCHEMA,
                 "serialized": serialized,
+                "checksum": _checksum(serialized),
                 "in_tree": in_tree,
                 "out_tree": out_tree,
             })
@@ -315,6 +383,10 @@ class _DiskBackedExecutable:
         engine = self._engine_ref() if self._engine_ref is not None else None
         return getattr(engine, "tracer", None)
 
+    def _injector(self):
+        engine = self._engine_ref() if self._engine_ref is not None else None
+        return getattr(engine, "fault_injector", None)
+
     def _materialize(self, args: tuple) -> None:
         if self.compiled is not None:
             return
@@ -328,6 +400,9 @@ class _DiskBackedExecutable:
             return
         with maybe_span(tracer, "serve.aot_compile", cat="compile") as sp:
             try:
+                inj = self._injector()
+                if inj is not None:
+                    inj.maybe_raise("compile.aot")
                 compiled = self.jitted.lower(*args).compile()
             except Exception:
                 # Can't AOT-lower these args (exotic pytrees, platform

@@ -33,12 +33,64 @@ from typing import Any
 
 import numpy as np
 
+from repro.faults.errors import (
+    CircuitOpen,
+    DeadlineExceeded,
+    FrontendClosed,
+    PoisonQuery,
+    is_transient,
+)
 from repro.obs.trace import maybe_span
 from repro.serve.metrics import ServeMetrics
 from repro.serve.queue import AdaptiveDelay, CoalescingBatcher, Flush
 
 DEFAULT_MAX_BATCH = 32
 DEFAULT_MAX_DELAY_MS = 5.0
+# Worker-crash requeues per request before the supervisor gives up and
+# resolves the future with the crash: bounds the restart loop under a
+# deterministic (always-firing) worker fault.
+MAX_REQUEUES = 3
+
+
+class _Breaker:
+    """Per-group circuit breaker.
+
+    ``threshold`` consecutive flush failures open the circuit; while
+    open, flushes fast-fail with ``CircuitOpen`` (no execute attempt —
+    a hard-down path stops burning retries and batch executes).  After
+    ``cooldown_s`` one probe batch is allowed through (half-open):
+    success closes the circuit, failure re-opens it for another
+    cooldown.  Touched only by the flush-executing thread (worker or
+    ``pump`` caller), so no lock is needed.
+    """
+
+    __slots__ = ("threshold", "cooldown_s", "failures", "opened_at")
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = max(int(threshold), 1)
+        self.cooldown_s = float(cooldown_s)
+        self.failures = 0
+        self.opened_at: float | None = None
+
+    def allow(self, now: float) -> bool:
+        if self.opened_at is None:
+            return True
+        return now - self.opened_at >= self.cooldown_s  # half-open probe
+
+    def record_failure(self, now: float) -> bool:
+        """Fold in one flush failure; True when this one trips it open."""
+        self.failures += 1
+        if self.opened_at is not None:   # failed half-open probe:
+            self.opened_at = now         # restart the cooldown
+            return False
+        if self.failures >= self.threshold:
+            self.opened_at = now
+            return True
+        return False
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self.opened_at = None
 
 
 @dataclasses.dataclass
@@ -99,8 +151,31 @@ class Frontend:
         clock=time.monotonic,
         adaptive_delay: bool = False,
         min_delay_ms: float = 0.5,
+        resilience: bool = True,
+        max_retries: int = 2,
+        retry_backoff_ms: float = 10.0,
+        breaker_threshold: int = 5,
+        breaker_cooldown_ms: float = 1000.0,
+        fault_injector=None,
     ):
         self.engine = engine
+        # Fault-tolerance knobs.  ``resilience=False`` is the bench
+        # escape hatch: no retries, no bisect, no breaker, no deadline
+        # checks — used to measure the fault-free overhead of the
+        # resilient default (<2% asserted by bench_serve_tier).
+        self._resilience = bool(resilience)
+        self._injector = (
+            fault_injector if fault_injector is not None
+            else getattr(engine, "fault_injector", None)
+        )
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_ms) / 1e3
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_ms) / 1e3
+        self._breakers: dict[Any, _Breaker] = {}
+        self._sleep = time.sleep   # injectable: tests retry without waiting
+        self._inflight: Flush | None = None
+        self._worker_restarts = 0
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_ms) / 1e3
         self.clock = clock
@@ -149,7 +224,7 @@ class Frontend:
             compiled = self.engine.compile(spec, **overrides)
         with self._lock:
             if self._closed:
-                raise RuntimeError("front-end is closed")
+                raise FrontendClosed("front-end is closed")
             if spec_key in self._paths:
                 raise ValueError(f"spec_key {spec_key!r} already registered")
             self._paths[spec_key] = _Path(
@@ -168,6 +243,7 @@ class Frontend:
         hg=None,
         query: Any = None,
         deadline_ms: float | None = None,
+        timeout_ms: float | None = None,
     ) -> Future:
         """Enqueue one query; resolves to a ``ServedResult``.
 
@@ -175,7 +251,11 @@ class Frontend:
         instead of the spec's own; queries only coalesce within one
         hypergraph.  ``deadline_ms`` bounds this request's queue wait —
         when it expires the batch flushes with whatever co-arrived
-        (default: the front-end's ``max_delay_ms``)."""
+        (default: the front-end's ``max_delay_ms``).  ``timeout_ms`` is
+        the request's HARD deadline: a request the tier cannot dispatch
+        by then (overload, retries, open circuit) resolves with
+        ``DeadlineExceeded`` instead of hanging.  Raises
+        ``FrontendClosed`` after ``close()``."""
         if spec_key not in self._paths:
             raise KeyError(
                 f"unknown spec_key {spec_key!r}; register() it first"
@@ -189,7 +269,7 @@ class Frontend:
         fut: Future = Future()
         with self._cond:
             if self._closed:
-                raise RuntimeError("front-end is closed")
+                raise FrontendClosed("front-end is closed")
             self._batcher.submit(
                 (spec_key, id(hg) if hg is not None else 0),
                 query,
@@ -197,6 +277,10 @@ class Frontend:
                 deadline_s=deadline_s,
                 hg=hg,
                 future=fut,
+                expiry=(
+                    self.clock() + timeout_ms / 1e3
+                    if timeout_ms is not None else None
+                ),
             )
             self._cond.notify()
         self.metrics.note_submit()
@@ -215,7 +299,13 @@ class Frontend:
         return self
 
     def close(self) -> None:
-        """Stop accepting, drain every pending request, stop the worker."""
+        """Stop accepting and stop the worker; requests still queued at
+        that point resolve exceptionally with ``FrontendClosed``.
+
+        A closed front-end never leaves a caller hanging on a future —
+        and never silently executes work after the owner said stop
+        (callers that want a synchronous final drain call
+        ``pump(drain=True)`` BEFORE closing)."""
         with self._cond:
             self._closed = True
             self._stop = True
@@ -223,7 +313,20 @@ class Frontend:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
-        self.pump(drain=True)  # whatever the worker didn't get to
+        with self._lock:
+            flushes = self._batcher.drain()
+        n = 0
+        err = FrontendClosed(
+            "front-end closed with this request still queued"
+        )
+        for flush in flushes:
+            for r in flush.requests:
+                if r.future is not None and not r.future.done():
+                    r.future.set_exception(err)
+                    n += 1
+        if n:
+            self.metrics.note_error(n)
+            self.metrics.registry.counter("faults.serve.closed_failed").inc(n)
 
     def __enter__(self) -> "Frontend":
         return self.start()
@@ -255,6 +358,51 @@ class Frontend:
                 n += 1
 
     def _worker(self) -> None:
+        # Supervisor loop: ``_serve_loop`` IS the worker; a crash
+        # anywhere in its flush path (including an injected
+        # ``serve.worker`` fault) lands here, where the in-flight batch
+        # is requeued (unresolved futures only, bounded by
+        # ``MAX_REQUEUES``) and the loop restarts — one poisoned control
+        # path cannot take the serving tier down with it.
+        while True:
+            try:
+                self._serve_loop()
+                return
+            except Exception as err:  # noqa: BLE001 - supervised restart
+                self._worker_restarts += 1
+                self.metrics.registry.counter(
+                    "faults.serve.worker_restarts"
+                ).inc()
+                flush, self._inflight = self._inflight, None
+                if flush is not None:
+                    self._requeue_after_crash(flush, err)
+
+    def _requeue_after_crash(self, flush: Flush, err: Exception) -> None:
+        survivors = []
+        for r in flush.requests:
+            if r.future is not None and r.future.done():
+                continue
+            r.requeues += 1
+            if r.requeues > MAX_REQUEUES:
+                # A request that keeps killing the worker resolves with
+                # the crash itself — never silently dropped, never an
+                # unbounded restart loop.
+                self._fail(r, err)
+                self.metrics.note_error()
+            else:
+                survivors.append(r)
+        if survivors:
+            with self._cond:
+                self._batcher.requeue(Flush(
+                    group=flush.group, requests=survivors,
+                    reason=flush.reason, hg=flush.hg,
+                ))
+                self.metrics.registry.counter(
+                    "faults.serve.requeued"
+                ).inc(len(survivors))
+                self._cond.notify_all()
+
+    def _serve_loop(self) -> None:
         while True:
             with self._cond:
                 flush = None
@@ -269,47 +417,109 @@ class Frontend:
                         else max(horizon - self.clock(), 0.0)
                     )
                 if flush is None and self._stop:
-                    flushes = self._batcher.drain()
-                    for f in flushes:
-                        self._run_flush(f)
+                    # close() resolves whatever is still queued with
+                    # FrontendClosed; the worker just stops.
                     return
+            self._inflight = flush
+            if self._injector is not None:
+                self._injector.maybe_raise(
+                    "serve.worker", group=str(flush.group[0])
+                )
             self._run_flush(flush)
+            self._inflight = None
             self.metrics.maybe_log(self.clock())
 
+    @staticmethod
+    def _fail(req, err: Exception) -> None:
+        if req.future is not None and not req.future.done():
+            req.future.set_exception(err)
+
     def _run_flush(self, flush: Flush) -> None:
+        path = self._paths[flush.group[0]]
+        # Skip futures a crashed-and-requeued flush already resolved.
+        reqs = [
+            r for r in flush.requests
+            if r.future is None or not r.future.done()
+        ]
+        if self._resilience and reqs:
+            # Hard per-request deadline: a request the tier could not
+            # dispatch in time resolves exceptionally, never hangs.
+            now = self.clock()
+            live = []
+            expired = 0
+            for r in reqs:
+                if r.expiry is not None and now > r.expiry:
+                    self._fail(r, DeadlineExceeded(
+                        f"request for {flush.group[0]!r} expired "
+                        f"{(now - r.expiry) * 1e3:.1f}ms past its deadline"
+                    ))
+                    expired += 1
+                else:
+                    live.append(r)
+            if expired:
+                self.metrics.note_error(expired)
+                self.metrics.registry.counter(
+                    "faults.serve.deadline_exceeded"
+                ).inc(expired)
+            reqs = live
+            if reqs:
+                breaker = self._breakers.get(flush.group)
+                if breaker is not None and not breaker.allow(self.clock()):
+                    err = CircuitOpen(
+                        f"circuit open for group {flush.group[0]!r} "
+                        f"after {breaker.failures} consecutive failures"
+                    )
+                    for r in reqs:
+                        self._fail(r, err)
+                    self.metrics.note_error(len(reqs))
+                    self.metrics.registry.counter(
+                        "faults.serve.breaker_fastfails"
+                    ).inc(len(reqs))
+                    return
+        if reqs:
+            self._execute_requests(path, flush, reqs, depth=0)
+
+    def _execute_requests(
+        self, path: _Path, flush: Flush, reqs: list, depth: int
+    ) -> None:
+        """Execute one (sub-)batch; on failure, bisect to isolate the
+        poison request instead of failing every co-batched neighbor."""
         from repro.core.serving import BATCH_FLOOR, bucket_dim
 
-        path = self._paths[flush.group[0]]
-        reqs = flush.requests
-        dispatch = self.clock()
-        waits = [dispatch - r.arrival for r in reqs]
         b = len(reqs)
         bucket = bucket_dim(b, floor=BATCH_FLOOR)
-        tracer = getattr(self.engine, "tracer", None)
+        dispatch = self.clock()
+        waits = [dispatch - r.arrival for r in reqs]
         try:
-            with maybe_span(
-                tracer, "serve.flush", cat="serve",
-                group=str(flush.group[0]), reason=flush.reason, batch=b,
-                bucket=bucket,
-            ) as sp:
-                queries = _stack([r.query for r in reqs])
-                res = path.compiled.run_batch(queries, hg=flush.hg)
-                value = res.value
-                if sp is not None:
-                    tracer.block(sp, value)
-                    sp.args["max_wait_s"] = max(waits, default=0.0)
-                else:
-                    _block(value)
-        except Exception as err:  # noqa: BLE001 - fanned out to futures
+            res, value, execute_s = self._attempt(
+                path, flush, reqs, b, bucket, waits
+            )
+        except Exception as err:  # noqa: BLE001 - isolated or fanned out
+            if self._resilience and b > 1:
+                # Batch bisect: halve and retry each side independently;
+                # only the poison request(s) ultimately fail, everyone
+                # else is served.  log2(b) extra executes, worst case.
+                self.metrics.registry.counter("faults.serve.bisects").inc()
+                mid = b // 2
+                self._execute_requests(path, flush, reqs[:mid], depth + 1)
+                self._execute_requests(path, flush, reqs[mid:], depth + 1)
+                return
+            self._record_outcome(flush.group, ok=False)
             self.metrics.note_flush(
                 flush.group[0], flush.reason, b, bucket, waits,
                 self.clock() - dispatch, error=True,
             )
+            if depth and self._resilience:
+                wrapped = PoisonQuery(
+                    f"query poisoned its batch "
+                    f"(group {flush.group[0]!r}): {err}"
+                )
+                wrapped.__cause__ = err
+                err = wrapped
             for r in reqs:
-                if r.future is not None:
-                    r.future.set_exception(err)
+                self._fail(r, err)
             return
-        execute_s = self.clock() - dispatch
+        self._record_outcome(flush.group, ok=True)
         executed = getattr(res, "supersteps_executed", None)
         # analysis: ignore[host-sync] — one scalar readback per FLUSH
         # (not per request) feeding the occupancy metrics
@@ -339,6 +549,60 @@ class Frontend:
                 group=flush.group[0],
                 supersteps_executed=executed,
             ))
+
+    def _attempt(self, path, flush, reqs, b, bucket, waits):
+        """One execute with transient-failure retries (exponential
+        backoff via the injectable ``self._sleep``)."""
+        tracer = getattr(self.engine, "tracer", None)
+        queries = _stack([r.query for r in reqs])
+        attempt = 0
+        while True:
+            dispatch = self.clock()
+            try:
+                with maybe_span(
+                    tracer, "serve.flush", cat="serve",
+                    group=str(flush.group[0]), reason=flush.reason,
+                    batch=b, bucket=bucket, attempt=attempt,
+                ) as sp:
+                    if self._injector is not None:
+                        self._injector.maybe_raise(
+                            "serve.flush", group=str(flush.group[0]),
+                            batch=b,
+                        )
+                    res = path.compiled.run_batch(queries, hg=flush.hg)
+                    value = res.value
+                    if sp is not None:
+                        tracer.block(sp, value)
+                        sp.args["max_wait_s"] = max(waits, default=0.0)
+                    else:
+                        _block(value)
+                return res, value, self.clock() - dispatch
+            except Exception as err:
+                if (
+                    not self._resilience
+                    or attempt >= self.max_retries
+                    or not is_transient(err)
+                ):
+                    raise
+                attempt += 1
+                self.metrics.registry.counter("faults.serve.retries").inc()
+                self._sleep(self.retry_backoff_s * (2 ** (attempt - 1)))
+
+    def _record_outcome(self, group, *, ok: bool) -> None:
+        if not self._resilience:
+            return
+        if ok:
+            breaker = self._breakers.get(group)
+            if breaker is not None:
+                breaker.record_success()
+            return
+        breaker = self._breakers.setdefault(
+            group, _Breaker(self.breaker_threshold, self.breaker_cooldown_s)
+        )
+        if breaker.record_failure(self.clock()):
+            self.metrics.registry.counter(
+                "faults.serve.breaker_trips"
+            ).inc()
 
     # -- observability -----------------------------------------------------
 
@@ -404,5 +668,8 @@ def _block(value: Any) -> None:
         # analysis: ignore[host-sync] — futures resolve to READY values
         # by contract (the tracer path measures this same wait)
         jax.block_until_ready(value)
-    except Exception:  # numpy-only test doubles
+    # analysis: ignore[swallowed-error] — numpy-only test doubles have
+    # nothing to block on; readiness here is best-effort and the result
+    # value is handed to the future either way
+    except Exception:
         pass

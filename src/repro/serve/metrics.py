@@ -66,6 +66,13 @@ class ServeMetrics:
         with self._lock:
             self.submitted += n
 
+    def note_error(self, n: int = 1) -> None:
+        """Requests resolved exceptionally OUTSIDE an executed flush
+        (deadline-expired, circuit-open fast-fail, front-end closed) —
+        keeps the ``in_flight`` balance exact."""
+        with self._lock:
+            self.errors += n
+
     def note_flush(
         self,
         group: Any,

@@ -37,9 +37,13 @@ class Request:
 
     ``deadline`` is absolute (same clock as ``submit``'s ``now``):
     the latest instant this request may keep waiting for co-batchable
-    traffic.  ``future`` is whatever completion handle the caller
-    attaches (the front-end uses ``concurrent.futures.Future``; the
-    pure tests use plain lists)."""
+    traffic.  ``expiry`` (also absolute, None = no limit) is the
+    request's HARD deadline: past it the front-end resolves the future
+    with ``DeadlineExceeded`` instead of serving.  ``future`` is
+    whatever completion handle the caller attaches (the front-end uses
+    ``concurrent.futures.Future``; the pure tests use plain lists).
+    ``requeues`` counts worker-crash requeues (bounded by the
+    supervisor so a deterministic crash cannot loop forever)."""
 
     group: Any
     query: Any
@@ -47,6 +51,8 @@ class Request:
     deadline: float
     future: Any = None
     seq: int = 0
+    expiry: float | None = None
+    requeues: int = 0
 
 
 @dataclasses.dataclass
@@ -97,6 +103,7 @@ class CoalescingBatcher:
         deadline_s: float,
         hg: Any = None,
         future: Any = None,
+        expiry: float | None = None,
     ) -> Request:
         """Admit one request; duplicates of an in-flight query are real
         requests (each gets its own slot and future)."""
@@ -107,6 +114,7 @@ class CoalescingBatcher:
             deadline=now + deadline_s,
             future=future,
             seq=next(self._seq),
+            expiry=expiry,
         )
         grp = self._groups.get(group_key)
         if grp is None:
@@ -177,6 +185,16 @@ class CoalescingBatcher:
         cap = self.capacity(key)
         batch, grp.pending = grp.pending[:cap], grp.pending[cap:]
         return Flush(group=key, requests=batch, reason=reason, hg=grp.hg)
+
+    def requeue(self, flush: Flush) -> None:
+        """Put a crashed worker's in-flight requests back at the HEAD of
+        their group, preserving FIFO order (their original deadlines
+        make the group immediately due again)."""
+        grp = self._groups.get(flush.group)
+        if grp is None:
+            grp = self._groups[flush.group] = _Group(flush.hg)
+        grp.hg = flush.hg
+        grp.pending[:0] = flush.requests
 
 
 class AdaptiveDelay:

@@ -177,6 +177,41 @@ def test_tracer_gate_requires_none_branch(tmp_path):
     assert gates == ["bad"]
 
 
+def test_swallowed_error_hot_routed_narrow_and_cold(tmp_path):
+    found = _lint_source(tmp_path, """
+        def _stack(reqs):
+            try:
+                work()
+            except Exception:            # hot + discarded -> finding
+                pass
+
+        def _unstack(reqs):
+            try:
+                work()
+            except Exception as err:     # routed: error reaches a future
+                reqs[0].future.set_exception(err)
+
+        def _block(value):
+            try:
+                work()
+            except ValueError:           # narrow: names the real failure
+                pass
+            try:
+                work()
+            except Exception:            # routed: re-raised
+                raise
+
+        def boot_helper(x):
+            try:
+                work()
+            except:                      # bare, but off the hot path
+                pass
+    """, rel="serve/frontend.py")
+    hits = {(f.scope, f.classification) for f in found
+            if f.rule == "swallowed-error"}
+    assert hits == {("_stack", "finding"), ("boot_helper", "cold-path")}
+
+
 def test_inline_suppression_same_line_and_block_above(tmp_path):
     found = _lint_source(tmp_path, """
         import numpy as np
