@@ -102,6 +102,15 @@ HOT_PATHS: dict[str, tuple[str, ...]] = {
         "CoalescingBatcher.submit", "CoalescingBatcher.poll",
         "CoalescingBatcher._take", "AdaptiveDelay.observe",
     ),
+    "serve/replica.py": (
+        "_serve_replica", "ProcessReplica.poll_messages",
+        "ProcessReplica.send",
+    ),
+    "serve/router.py": (
+        "Router.submit", "Router.pump", "Router._admit", "Router._route",
+        "Router._dispatch", "Router._on_message", "Router._mark_dead",
+        "Router._apply", "Router._fail_pending_if_hopeless",
+    ),
     "kernels/deliver/fused.py": (
         "deliver_fused_pallas", "deliver_fused_classes",
         "_combine_kernel",
@@ -118,8 +127,8 @@ _BROAD_EXC = {"Exception", "BaseException"}
 _ERROR_ROUTES = {
     "FaultError", "InjectedFault", "TransientExecuteError",
     "DeadlineExceeded", "FrontendClosed", "PoisonQuery", "CircuitOpen",
-    "CorruptCacheEntry", "CheckpointError", "is_transient",
-    "set_exception",
+    "CorruptCacheEntry", "CheckpointError", "ReplicaLost", "Overloaded",
+    "is_transient", "set_exception",
 }
 
 

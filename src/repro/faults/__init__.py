@@ -24,7 +24,9 @@ from repro.faults.errors import (
     FaultError,
     FrontendClosed,
     InjectedFault,
+    Overloaded,
     PoisonQuery,
+    ReplicaLost,
     TransientExecuteError,
     is_transient,
 )
@@ -43,7 +45,9 @@ __all__ = [
     "FaultRule",
     "FrontendClosed",
     "InjectedFault",
+    "Overloaded",
     "PoisonQuery",
+    "ReplicaLost",
     "TransientExecuteError",
     "is_transient",
 ]

@@ -73,6 +73,20 @@ class CheckpointError(FaultError):
     """A superstep checkpoint could not be saved or restored."""
 
 
+class ReplicaLost(FaultError):
+    """A request exhausted its failover budget: every replica it was
+    routed to died (missed heartbeats / broken pipe) before answering.
+    The future RESOLVES with this error after ``MAX_FAILOVERS``
+    re-routes — bounded, typed, never a hang."""
+
+
+class Overloaded(FaultError):
+    """The router shed this request at admission: total queue depth
+    (pending + in-flight across the replica pool) hit the backpressure
+    limit.  Fail-fast load shedding — the client should back off and
+    retry; the pool keeps serving what it already accepted."""
+
+
 def is_transient(err: BaseException) -> bool:
     """Should the serve tier retry after ``err``?  The one predicate the
     backoff loop consults."""

@@ -113,8 +113,16 @@ class FaultInjector:
             return self._fired[point]
 
     def snapshot(self) -> dict:
+        """Per-point calls/fired, plus ``never_fired``: points the plan
+        targets whose rules never triggered — chaos CI asserts this is
+        empty to prove the plan actually exercised every scheduled
+        failure (a plan that silently misses its points tests nothing)."""
         with self._lock:
+            planned = {r.point for r in self.plan.rules}
             return {
                 "calls": dict(self._calls),
                 "fired": dict(self._fired),
+                "never_fired": sorted(
+                    p for p in planned if self._fired[p] == 0
+                ),
             }

@@ -28,6 +28,12 @@ The failure points the engine + serve tier instrument today:
 ``serve.flush``     ``Frontend._run_flush`` (before the batch executes)
 ``serve.worker``    the front-end worker loop (models a thread crash)
 ``checkpoint.chunk``after each superstep checkpoint chunk is saved
+``replica.crash``   the replica request loop — a fire hard-exits the
+                    process (``os._exit``), modeling kill -9
+``replica.hang``    the replica request loop — a fire stops heartbeats
+                    without exiting, modeling a wedged process
+``router.route``    ``Router.submit`` routing — a fire resolves that
+                    request with the injected typed error
 ==================  ======================================================
 
 Unknown points are legal in a plan (they simply never fire) so plans
@@ -49,6 +55,9 @@ FAULT_POINTS = (
     "serve.flush",
     "serve.worker",
     "checkpoint.chunk",
+    "replica.crash",
+    "replica.hang",
+    "router.route",
 )
 
 _TRIGGERS = ("always", "nth", "every", "prob")
@@ -122,9 +131,13 @@ class FaultPlan:
         return tuple(r for r in self.rules if r.point == point)
 
     def validate(self) -> list[str]:
-        """Non-fatal lint: rule points nothing instruments today."""
+        """Non-fatal lint: rule points nothing instruments today.  Each
+        warning lists the valid inventory so a typo'd plan is fixable
+        from the warning alone."""
+        inventory = ", ".join(FAULT_POINTS)
         return [
-            f"rule targets unknown point {r.point!r}"
+            f"rule targets unknown point {r.point!r}; "
+            f"instrumented points: {inventory}"
             for r in self.rules
             if r.point not in FAULT_POINTS
         ]

@@ -42,6 +42,26 @@ import sys
 import time
 
 
+def build_paths(regime: str = "dblp", scale: float = 0.003,
+                seed: int = 0, iters: int = 12) -> dict:
+    """Replica builder (``ReplicaConfig.builder`` target): constructs
+    the served paths INSIDE the worker process, so nothing unpicklable
+    crosses the spawn boundary — each replica regenerates the (seeded,
+    deterministic) dataset and spec set locally, and ``stable_digest``
+    re-keys them onto the same shared disk-store entries."""
+    from repro import algorithms as alg
+    from repro.data import make_dataset
+
+    hg = make_dataset(regime, scale=scale, seed=seed)
+    return {
+        "specs": {
+            "sssp": alg.shortest_paths_spec(hg, source=0, max_iters=iters),
+            "ppr": alg.random_walk_spec(hg, iters=iters),
+        },
+        "warm_queries": [0, 0],  # ppr has no query0; seed vertex 0
+    }
+
+
 def _parse(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--regime", default="dblp",
@@ -79,6 +99,14 @@ def _parse(argv=None):
                     help="skip the boot-time warmup pass")
     ap.add_argument("--warm", dest="warm", action="store_true",
                     default=True)
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve through a pool of N replica processes "
+                         "behind the heartbeat-failover Router (0 = "
+                         "single-process front-end); replicas boot from "
+                         "the shared --cache-dir store")
+    ap.add_argument("--heartbeat-timeout-ms", type=float, default=2000.0,
+                    help="router declares a replica dead after this "
+                         "long without a heartbeat")
     ap.add_argument("--fault-plan", default=None, metavar="JSON",
                     help="chaos mode: a FaultPlan as inline JSON or a "
                          "file path; scheduled failures are injected at "
@@ -120,7 +148,7 @@ def main(argv=None) -> int:
         from repro.obs import Tracer
 
         tracer = Tracer()
-    injector = None
+    injector, plan_json = None, None
     if args.fault_plan:
         from repro.faults import FaultInjector, FaultPlan
 
@@ -132,10 +160,15 @@ def main(argv=None) -> int:
         for warning in plan.validate():
             print(f"fault-plan: {warning}", file=sys.stderr)
         injector = FaultInjector(plan)
+        plan_json = plan.to_json()
         print(f"fault-plan: {len(plan.rules)} rule(s) armed")
     engine = Engine(
         mesh=mesh, disk_cache=DiskExecutableCache(args.cache_dir),
-        tracer=tracer, fault_injector=injector,
+        tracer=tracer,
+        # In pool mode the parent engine is the prewarmer + verify
+        # oracle, never the system under test: the plan is armed inside
+        # each replica (and on the router for ``router.route``) instead.
+        fault_injector=None if args.replicas > 0 else injector,
     )
     specs = {
         "sssp": alg.shortest_paths_spec(hg, source=0,
@@ -153,6 +186,9 @@ def main(argv=None) -> int:
               f"{report['traces']} traces, "
               f"{report['from_disk']} from disk, "
               f"{report['compiled']} compiled")
+
+    if args.replicas > 0:
+        return _serve_pool(args, engine, specs, hg, injector, plan_json)
 
     fe = Frontend(
         engine, max_batch=args.max_batch,
@@ -247,6 +283,138 @@ def main(argv=None) -> int:
               f"({tracer.dropped} dropped) -> {args.trace}")
     if args.metrics_json:
         payload = json.dumps(engine.metrics.snapshot(), indent=2,
+                             sort_keys=True, default=str)
+        if args.metrics_json == "-":
+            print(payload)
+        else:
+            with open(args.metrics_json, "w") as f:
+                f.write(payload + "\n")
+            print(f"metrics -> {args.metrics_json}")
+    return 0
+
+
+def _serve_pool(args, engine, specs, hg, injector, plan_json) -> int:
+    """Replay the trace through a ``Router`` over N replica processes.
+
+    The parent already prewarmed the shared disk store (under
+    ``--warm``), so every replica boots ``require_no_retrace=True``;
+    the parent engine stays fault-free and serves as the bitwise
+    ``--verify`` oracle.  The chaos invariant being demonstrated:
+    every request resolves even when ``replica.crash`` kills workers
+    mid-replay, and the survivors' successes match the sequential run.
+    """
+    import dataclasses
+    import itertools
+
+    import jax
+    import numpy as np
+
+    from repro.serve import ProcessReplica, ReplicaConfig, Router
+
+    cfg = ReplicaConfig(
+        builder="repro.launch.serve_hypergraph:build_paths",
+        kwargs={"regime": args.regime, "scale": args.scale,
+                "seed": args.seed, "iters": args.iters},
+        cache_dir=args.cache_dir,
+        max_batch=args.max_batch,
+        max_delay_ms=args.max_delay_ms,
+        fault_plan=plan_json,
+        require_no_retrace=args.warm,
+        heartbeat_interval_s=min(0.1, args.heartbeat_timeout_ms / 4e3),
+    )
+    # Every spawned instance (initial or respawn) gets a distinct prob
+    # seed offset, so a respawned replica doesn't replay the exact fault
+    # draws that killed its predecessor (see ReplicaConfig.seed_offset).
+    spawns = itertools.count()
+
+    def factory(index: int) -> ProcessReplica:
+        return ProcessReplica(index, dataclasses.replace(
+            cfg, seed_offset=1009 * next(spawns)))
+
+    router = Router(
+        factory, args.replicas,
+        heartbeat_timeout_ms=args.heartbeat_timeout_ms,
+        max_in_flight=2 * args.max_batch,
+        fault_injector=injector,
+    ).start()
+    try:
+        t0 = time.perf_counter()
+        router.wait_ready()
+        boot_s = time.perf_counter() - t0
+        boots = [s["boot"] for s in router.stats()["per_replica"]]
+        print(f"pool: {args.replicas} replicas ready in {boot_s:.3f}s; "
+              f"boots: " + ", ".join(
+                  f"#{b['index']} {b['boot_s']:.2f}s "
+                  f"(disk={b['from_disk']} aot={b['compiled']} "
+                  f"traces={b['traces']})"
+                  for b in boots if b))
+
+        rng = np.random.default_rng(args.seed)
+        trace = [
+            ("sssp" if rng.random() < args.mix else "ppr",
+             int(rng.integers(0, hg.n_vertices)))
+            for _ in range(args.requests)
+        ]
+        t0 = time.perf_counter()
+        futs = [(key, q, router.submit(key, query=q)) for key, q in trace]
+        results, failures = [], []
+        for key, q, f in futs:
+            try:
+                results.append((key, q, f.result(timeout=300)))
+            except RuntimeError as err:  # typed FaultError taxonomy
+                failures.append((key, q, err))
+        wall_s = time.perf_counter() - t0
+    finally:
+        router.close()
+
+    st = router.stats()
+    if st["in_flight"] != 0 or st["pending"] != 0:
+        print(f"ROUTER LEAK: in_flight={st['in_flight']} "
+              f"pending={st['pending']} after drain", file=sys.stderr)
+        return 1
+    if failures and injector is None:
+        print(f"{len(failures)} requests failed without a fault plan",
+              file=sys.stderr)
+        return 1
+    print(f"served {len(results)}/{len(trace)} requests in {wall_s:.3f}s "
+          f"({len(results) / wall_s:.1f} q/s aggregate)")
+    print(f"  pool: deaths={st['deaths']} respawns={st['respawns']} "
+          f"failovers={st['failovers']} lost={st['lost']} "
+          f"shed={st['shed']}")
+    for p in st["per_replica"]:
+        print(f"  replica {p['index']}: {p['state']} served={p['served']} "
+              f"errors={p['errors']} deaths={p['deaths']} "
+              f"respawns={p['respawns']}")
+    if injector is not None:
+        snap = injector.snapshot()
+        print(f"  router-side fault injection: "
+              f"{sum(snap['fired'].values())} fired across "
+              f"{sum(snap['calls'].values())} calls; "
+              f"never fired: {snap['never_fired'] or 'none'} "
+              f"(replica-side points fire inside the workers); "
+              f"{len(failures)} requests resolved with typed errors")
+
+    if args.verify and results:
+        idx = rng.choice(len(results),
+                         size=min(args.verify, len(results)),
+                         replace=False)
+        for i in idx:
+            key, q, served = results[i]
+            seq = engine.compile(specs[key]).run(query=q)
+            for a, b in zip(jax.tree.leaves(seq.value),
+                            jax.tree.leaves(served.value)):
+                if not np.array_equal(np.asarray(a), np.asarray(b),
+                                      equal_nan=True):
+                    print(f"VERIFY FAILED: {key} query={q}",
+                          file=sys.stderr)
+                    return 1
+        print(f"verified {len(idx)} pool-served results bitwise vs "
+              f"sequential run")
+
+    if args.metrics_json:
+        from repro.obs.metrics import default_registry
+
+        payload = json.dumps(default_registry().snapshot(), indent=2,
                              sort_keys=True, default=str)
         if args.metrics_json == "-":
             print(payload)

@@ -25,6 +25,14 @@ request-serving subsystem, in three layers:
   histograms split queue-wait vs execute, per-bucket occupancy, flush
   reasons, cache hit/miss/eviction/disk counters — exposed as
   ``Frontend.stats()`` and a periodic log line.
+* ``replica`` / ``router`` — multi-replica serving: N worker
+  *processes* (``ProcessReplica``) each booting ``warm(...,
+  require_no_retrace=True)`` from the ONE shared disk store, behind a
+  ``Router`` doing affinity/least-loaded routing, heartbeat death
+  detection, bounded failover (``ReplicaLost`` after ``MAX_FAILOVERS``),
+  disk-warmed respawn and ``Overloaded`` load shedding.  The PR 9
+  invariant — every request resolves, successes bitwise equal the
+  sequential fault-free path — holds across kill -9.
 
 Entry points: ``repro.launch.serve_hypergraph`` (mixed SSSP/PPR replay
 loop) and ``benchmarks/bench_serve_tier.py`` (sustained q/s, p99, boot
@@ -34,6 +42,8 @@ from repro.serve.cache import DiskExecutableCache, stable_digest, warm
 from repro.serve.frontend import Frontend, ServedResult
 from repro.serve.metrics import LatencyHistogram, ServeMetrics
 from repro.serve.queue import AdaptiveDelay, CoalescingBatcher, Flush, Request
+from repro.serve.replica import ProcessReplica, ReplicaConfig, replica_main
+from repro.serve.router import MAX_FAILOVERS, Router
 
 __all__ = [
     "AdaptiveDelay",
@@ -42,9 +52,14 @@ __all__ = [
     "Flush",
     "Frontend",
     "LatencyHistogram",
+    "MAX_FAILOVERS",
+    "ProcessReplica",
+    "ReplicaConfig",
     "Request",
+    "Router",
     "ServedResult",
     "ServeMetrics",
+    "replica_main",
     "stable_digest",
     "warm",
 ]

@@ -30,6 +30,7 @@ lazily on first use (the call site in ``serving._execute`` is unchanged).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import os
@@ -41,6 +42,11 @@ import weakref
 from functools import partial
 from pathlib import Path
 from typing import Any, Iterable
+
+try:
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX: publish stays atomic
+    fcntl = None
 
 import numpy as np
 
@@ -195,6 +201,7 @@ class DiskExecutableCache:
             "warm_records": 0,
             "disk_quarantined": 0,
             "disk_migrated": 0,
+            "disk_lock_waits": 0,
         }
         # Duck-typed like Engine.tracer: Engine(fault_injector=...)
         # forwards its injector here so the disk.read / disk.write /
@@ -225,6 +232,36 @@ class DiskExecutableCache:
             except OSError:
                 pass
             raise
+
+    @contextlib.contextmanager
+    def lock(self, key: Any):
+        """Advisory cross-process claim on one signature.
+
+        Two replicas booting concurrently from one store race the same
+        miss: both would pay the AOT compile and rename over each other
+        (safe — the publish is atomic — but one whole compile is
+        wasted).  Holding the signature's ``flock`` while compiling
+        serializes the claim: the loser blocks (counted as a
+        ``disk_lock_waits``), then finds the winner's entry on its
+        re-check load.  The lock lives next to the entry
+        (``<digest>.lock``) and the kernel releases it on process death,
+        so a replica killed -9 mid-compile never wedges its peers.
+        No-op where ``fcntl`` is unavailable (the atomic publish is the
+        only guarantee there)."""
+        if fcntl is None:
+            yield
+            return
+        self.dir.mkdir(parents=True, exist_ok=True)
+        with open(self.dir / f"{stable_digest(key)}.lock", "ab") as f:
+            try:
+                fcntl.flock(f, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError:
+                self._stats["disk_lock_waits"] += 1
+                fcntl.flock(f, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(f, fcntl.LOCK_UN)
 
     def _quarantine(self, path: Path, err: Exception) -> None:
         """Move a bad entry aside (``<name>.corrupt``, never deleted —
@@ -398,23 +435,35 @@ class _DiskBackedExecutable:
             if sp is not None:
                 sp.args["source"] = "disk"
             return
-        with maybe_span(tracer, "serve.aot_compile", cat="compile") as sp:
-            try:
-                inj = self._injector()
-                if inj is not None:
-                    inj.maybe_raise("compile.aot")
-                compiled = self.jitted.lower(*args).compile()
-            except Exception:
-                # Can't AOT-lower these args (exotic pytrees, platform
-                # quirks): serve through plain jit, skip persistence.
-                self.compiled, self.source = self.jitted, "jit"
+        # Miss: claim the signature before compiling so concurrently
+        # booting replicas don't duplicate the AOT work — the loser of
+        # the claim blocks, then finds the winner's entry on re-check.
+        with self.cache.lock(self.key):
+            with maybe_span(tracer, "serve.disk_load", cat="compile") as sp:
+                loaded = self.cache.load(self.key)
+            if loaded is not None:
+                self.compiled, self.source = loaded, "disk"
                 if sp is not None:
-                    sp.args["source"] = "jit"
+                    sp.args["source"] = "disk"
                 return
-            self.compiled, self.source = compiled, "aot"
-            if sp is not None:
-                sp.args["source"] = "aot"
-        self.cache.store(self.key, compiled)
+            with maybe_span(tracer, "serve.aot_compile", cat="compile") as sp:
+                try:
+                    inj = self._injector()
+                    if inj is not None:
+                        inj.maybe_raise("compile.aot")
+                    compiled = self.jitted.lower(*args).compile()
+                except Exception:
+                    # Can't AOT-lower these args (exotic pytrees,
+                    # platform quirks): serve through plain jit, skip
+                    # persistence.
+                    self.compiled, self.source = self.jitted, "jit"
+                    if sp is not None:
+                        sp.args["source"] = "jit"
+                    return
+                self.compiled, self.source = compiled, "aot"
+                if sp is not None:
+                    sp.args["source"] = "aot"
+            self.cache.store(self.key, compiled)
 
     def warm(self, args: tuple) -> str:
         """Materialize without executing; returns the winning source."""

@@ -98,6 +98,18 @@ def test_plan_validate_flags_unknown_points():
     assert len(warnings) == 1 and "warp.core" in warnings[0]
 
 
+def test_plan_validate_lists_point_inventory():
+    # the warning alone is enough to fix a typo'd plan: it quotes the
+    # full instrumented-point inventory
+    from repro.faults import FAULT_POINTS
+
+    warnings = FaultPlan((FaultRule(point="warp.core"),)).validate()
+    for point in FAULT_POINTS:
+        assert point in warnings[0]
+    assert "replica.crash" in warnings[0]       # the new replica points
+    assert "router.route" in warnings[0]
+
+
 # --------------------------------------------------------------------------
 # FaultInjector: deterministic triggers, taxonomy mapping
 # --------------------------------------------------------------------------
@@ -128,6 +140,21 @@ def test_injector_always_nth_every_times():
     snap = inj.snapshot()
     assert snap["calls"] == {"a": 4, "b": 4, "c": 5, "z": 2}
     assert snap["fired"] == {"a": 2, "b": 1, "c": 2}
+    assert snap["never_fired"] == []         # every planned point fired
+
+
+def test_snapshot_reports_never_fired_points():
+    # a plan whose rule never triggers (nth call never reached) shows up
+    # in never_fired — chaos CI asserts on this to prove the plan
+    # actually exercised its scheduled failures
+    inj = FaultInjector(FaultPlan((
+        FaultRule(point="a", trigger="always", times=1),
+        FaultRule(point="b", trigger="nth", n=100),
+    )))
+    _fire_pattern(inj, "a", 2)
+    _fire_pattern(inj, "b", 2)
+    snap = inj.snapshot()
+    assert snap["never_fired"] == ["b"]
 
 
 def test_injector_prob_is_deterministic_per_seed():
